@@ -1,0 +1,82 @@
+"""Shared harness for the paper-table benchmarks.
+
+The paper ran p ∈ {48 … 600} MPI ranks on an SGI ICE X (n = 150³/185³); the
+event-level simulator reproduces the *structure* of those tables at reduced
+scale (p ∈ {4 … 32}, n ∈ {16, 24}) with virtual time — scale reduction is
+recorded in EXPERIMENTS.md.  Every row reports min/max final exact residual
+r*, mean virtual wall-time, and mean k_max over ``SEEDS`` runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.async_engine import AsyncEngine, stable_platform
+from repro.core.protocols import NFAIS2, NFAIS5, PFAIT, ExactSnapshotFIFO
+from repro.solvers.convdiff import ConvDiffProblem
+
+SEEDS = (0, 1, 2, 3)
+
+
+def make_protocol(name: str, eps: float, ord_: float, m: int = 4):
+    if name == "pfait":
+        return PFAIT(eps, ord=ord_)
+    if name == "nfais2":
+        return NFAIS2(eps, ord=ord_)
+    if name == "nfais5":
+        return NFAIS5(eps, ord=ord_, m=m)
+    if name == "exact":
+        return ExactSnapshotFIFO(eps, ord=ord_)
+    raise KeyError(name)
+
+
+def run_cell(protocol: str, eps: float, n: int, p: int, rho: float = 0.93,
+             seeds=SEEDS, max_iters: int = 60_000, platform=stable_platform) -> Dict:
+    rs, wts, kmaxs, wall = [], [], [], 0.0
+    for seed in seeds:
+        prob = ConvDiffProblem(n=n, p=p, rho=rho, seed=seed)
+        cfg = dataclasses.replace(platform(), seed=seed, max_iters=max_iters,
+                                  fifo=(protocol == "exact"))
+        t0 = time.time()
+        eng = AsyncEngine(prob, cfg, make_protocol(protocol, eps, prob.ord))
+        r = eng.run()
+        wall += time.time() - t0
+        assert r.terminated, (protocol, eps, n, p, seed)
+        rs.append(r.r_star)
+        wts.append(r.wtime)
+        kmaxs.append(r.k_max)
+    return {
+        "protocol": protocol,
+        "eps": eps,
+        "n": n,
+        "p": p,
+        "min_r": float(np.min(rs)),
+        "max_r": float(np.max(rs)),
+        "wtime": float(np.mean(wts)),
+        "k_max": float(np.mean(kmaxs)),
+        "wall_s": wall,
+    }
+
+
+def print_rows(title: str, rows: List[Dict]) -> None:
+    print(f"\n## {title}")
+    print(f"{'proto':8s} {'eps':>8s} {'p':>4s} {'min r*':>10s} {'max r*':>10s} "
+          f"{'wtime':>8s} {'k_max':>8s}")
+    for r in rows:
+        print(f"{r['protocol']:8s} {r['eps']:8.1e} {r['p']:4d} "
+              f"{r['min_r']:10.2e} {r['max_r']:10.2e} "
+              f"{r['wtime']:8.4f} {r['k_max']:8.0f}")
+
+
+def csv_rows(table: str, rows: List[Dict]) -> List[str]:
+    out = []
+    for r in rows:
+        us = r["wall_s"] / len(SEEDS) * 1e6
+        derived = (f"minr={r['min_r']:.2e};maxr={r['max_r']:.2e};"
+                   f"wtime={r['wtime']:.4f};kmax={r['k_max']:.0f};"
+                   f"p={r['p']};eps={r['eps']:.0e}")
+        out.append(f"{table}/{r['protocol']}_p{r['p']},{us:.0f},{derived}")
+    return out

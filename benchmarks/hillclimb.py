@@ -1,0 +1,129 @@
+"""§Perf hillclimb driver: lower optimization variants of the three chosen
+cells, measure the roofline terms, append to experiments/perf_iterations.json.
+
+Run (one variant at a time — each re-lowers at 512 host devices):
+  PYTHONPATH=src:. python -m benchmarks.hillclimb --cell qwen --variant pairs
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def measure_lm(arch: str, shape: str, variant: str, attn_impl: str = "blocked",
+               microbatch=None, tp_reduce_bf16: bool = False,
+               remat: str = "block"):
+    from repro.configs.base import ParallelConfig
+    from repro.launch.dryrun import lower_cell
+
+    par = ParallelConfig(attn_impl=attn_impl, tp_reduce_bf16=tp_reduce_bf16,
+                         remat=remat)
+    rec = lower_cell(arch, shape, multi_pod=False, parallel=par,
+                     microbatch_override=microbatch, variant=variant)
+    return rec
+
+
+def measure_solver(variant: str, inner_sweeps: int = 4, n: int = 1024,
+                   staleness: int = 4, use_kernel: bool = False):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import detection
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_production_mesh
+    from repro.solvers.convdiff import Stencil
+    from repro.solvers.fixed_point import SolverConfig, make_sharded_solver
+
+    mesh = make_production_mesh()
+    st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.95)
+    mon = detection.for_mode("pfait", eps_tilde=1e-4, margin=10.0,
+                             staleness=staleness)
+    max_outer = 20_000 // inner_sweeps
+    cfg = SolverConfig(stencil=st, monitor=mon, inner_sweeps=inner_sweeps,
+                       max_outer=max_outer, use_kernel=use_kernel)
+    solve = make_sharded_solver(cfg, mesh)
+    spec = P("data", "model", None)
+    x0 = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, spec))
+    b = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, spec))
+    compiled = jax.jit(solve).lower(x0, b).compile()
+    pstats = hlo_analysis.program_stats(compiled.as_text(), default_group=256)
+    # Normalise per sweep: infer how many outer iterations the parser folded
+    # in from the halo-permute count (8 permutes per outer iteration: 4 faces
+    # canonicalised into 8 one-directional shifts).
+    permutes = pstats.coll_counts.get("collective-permute", 8)
+    outers_counted = max(permutes / 8.0, 1.0)
+    sweeps_counted = outers_counted * inner_sweeps
+    cells = n * n * n / 256  # per device
+    stencil_flops = 14.0 * cells  # 7-pt stencil: 6 mul + 6 add + sub + div
+    return {
+        "arch": f"convdiff-n{n}", "shape": "solver", "variant": variant,
+        "inner_sweeps": inner_sweeps,
+        "cost": {
+            # stencils have no dots — analytic FLOPs per sweep
+            "flops_per_device": stencil_flops,
+            "hbm_bytes_per_device": pstats.hbm_bytes / sweeps_counted,
+        },
+        "collectives": {
+            "total_wire_bytes": pstats.total_wire_bytes / sweeps_counted,
+            "counts": {k: v / sweeps_counted
+                       for k, v in pstats.coll_counts.items()},
+        },
+        "per": "sweep",
+    }
+
+
+def report(rec, chips=256):
+    PEAK, HBM, LINK = 197e12, 819e9, 50e9
+    c = rec["cost"]["flops_per_device"] / PEAK
+    m = rec["cost"]["hbm_bytes_per_device"] / HBM
+    w = rec["collectives"]["total_wire_bytes"] / LINK
+    dom = max((c, "compute"), (m, "memory"), (w, "collective"))[1]
+    print(f"{rec.get('arch')}/{rec.get('shape')}/{rec['variant']}: "
+          f"compute {c*1e3:.2f}ms  memory {m*1e3:.2f}ms  collective {w*1e3:.2f}ms "
+          f"→ dominant {dom}")
+    return {"compute_s": c, "memory_s": m, "collective_s": w, "dominant": dom}
+
+
+def append(rec, path="experiments/perf_iterations.json"):
+    rows = []
+    if os.path.exists(path):
+        rows = json.load(open(path))
+    rows.append(rec)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    json.dump(rows, open(path, "w"), indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    choices=["qwen", "llama4", "grok", "solver"])
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--attn-impl", default="blocked")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--tp-bf16", action="store_true")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--inner-sweeps", type=int, default=4)
+    args = ap.parse_args()
+
+    if args.cell == "solver":
+        rec = measure_solver(args.variant, inner_sweeps=args.inner_sweeps)
+    else:
+        arch = {"qwen": "qwen2.5-32b", "llama4": "llama4-maverick-400b-a17b",
+                "grok": "grok-1-314b"}[args.cell]
+        rec = measure_lm(arch, "train_4k", args.variant,
+                         attn_impl=args.attn_impl, microbatch=args.microbatch,
+                         tp_reduce_bf16=args.tp_bf16, remat=args.remat)
+    rec["terms"] = report(rec)
+    append(rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""§Roofline: three-term analysis per (arch × shape) from the dry-run.
+
+Terms (per device, per step; v5e-class constants):
+    compute_s    = HLO_FLOPs / 197 TFLOP/s (bf16 MXU peak)
+    memory_s     = HLO_HBM_bytes / 819 GB/s
+    collective_s = wire_bytes / 50 GB/s (one ICI link, conservative —
+                   concurrent links can cut this up to 4×; noted in
+                   EXPERIMENTS.md)
+
+FLOPs/bytes are the **loop-aware parsed** values (launch/hlo_analysis.py):
+``cost_analysis()`` counts while bodies once, which would understate a
+scan-over-layers program by the layer count.
+
+MODEL_FLOPS (useful compute): 6·N·tokens for training, 2·N·tokens for
+prefill/decode (forward only), with N = active params for MoE.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / ICI link (single-link, conservative)
+
+SHAPE_TOKENS = {
+    "train_4k": (4096 * 256, 6),
+    "prefill_32k": (32768 * 32, 2),
+    "decode_32k": (128, 2),
+    "long_500k": (1, 2),
+}
+
+
+def analyze_record(rec: Dict, chips: int = 256) -> Optional[Dict]:
+    if rec.get("skipped") or "error" in rec or rec.get("kind") == "solver":
+        return None
+    flops = rec["cost"]["flops_per_device"]
+    hbm = rec["cost"]["hbm_bytes_per_device"]
+    wire = rec["collectives"]["total_wire_bytes"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = wire / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    tokens, mult = SHAPE_TOKENS[rec["shape"]]
+    n_params = rec["model_active_params"]
+    model_flops = mult * n_params * tokens / chips
+    useful = model_flops / flops if flops else 0.0
+    # roofline fraction: useful model compute per step / (peak × step time
+    # bound).  Step time lower bound = max(terms) (no overlap assumption).
+    step_bound = max(terms.values())
+    mfu_bound = model_flops / PEAK_FLOPS / step_bound if step_bound else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_per_dev": model_flops,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu_bound,
+        "peak_gib": rec["memory"]["peak_estimate_bytes"] / 2**30,
+        "compile_s": rec["compile_s"],
+    }
+
+
+def run(dryrun_path: str = "experiments/dryrun.json",
+        out_csv: str = "experiments/roofline.csv",
+        mesh: str = "16x16", verbose: bool = True) -> List[Dict]:
+    if not os.path.exists(dryrun_path):
+        if verbose:
+            print(f"[roofline] {dryrun_path} missing — run "
+                  f"`python -m repro.launch.dryrun` first")
+        return []
+    with open(dryrun_path) as f:
+        records = json.load(f)
+    chips = 512 if mesh == "2x16x16" else 256
+    rows = [r for r in (analyze_record(rec, chips) for rec in records
+                        if rec.get("mesh") == mesh) if r]
+    if verbose and rows:
+        print(f"\n## Roofline — {mesh} ({chips} chips), per device per step")
+        print(f"{'arch':26s} {'shape':12s} {'comp(ms)':>9s} {'mem(ms)':>9s} "
+              f"{'coll(ms)':>9s} {'dominant':>10s} {'useful':>7s} {'RLfrac':>7s}")
+        for r in rows:
+            print(f"{r['arch']:26s} {r['shape']:12s} "
+                  f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:9.2f} "
+                  f"{r['collective_s']*1e3:9.2f} {r['dominant']:>10s} "
+                  f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:7.3f}")
+    if rows:
+        os.makedirs(os.path.dirname(out_csv) or ".", exist_ok=True)
+        import csv as _csv
+
+        with open(out_csv, "w", newline="") as f:
+            w = _csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    return rows
+
+
+def csv_rows(rows: List[Dict]) -> List[str]:
+    out = []
+    for r in rows:
+        us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        derived = (f"dom={r['dominant']};useful={r['useful_ratio']:.3f};"
+                   f"rl={r['roofline_fraction']:.3f};peakGiB={r['peak_gib']:.1f}")
+        out.append(f"roofline/{r['arch']}_{r['shape']},{us:.0f},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Benchmark harness — one entry per paper table + the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV rows (and human tables to stderr-ish
+stdout above them).  The solver tables run the event-level simulator at
+reduced scale (see benchmarks/common.py); the roofline rows are derived from
+the dry-run artifact if present.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def main() -> None:
+    jax.config.update("jax_enable_x64", True)  # solver residuals < 1e-7
+
+    from benchmarks import (
+        roofline,
+        table1_small_residuals,
+        table2_small_times,
+        table3_threshold,
+        table45_large,
+    )
+
+    csv_lines = []
+    for mod in (table1_small_residuals, table2_small_times,
+                table3_threshold, table45_large):
+        lines, _ = mod.run(verbose=True)
+        csv_lines.extend(lines)
+    rows = roofline.run(verbose=True)
+    csv_lines.extend(roofline.csv_rows(rows))
+
+    print("\n# CSV")
+    print("name,us_per_call,derived")
+    for line in csv_lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

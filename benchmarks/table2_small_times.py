@@ -1,0 +1,29 @@
+"""Table 2: wall-clock (virtual) time and k_max at ε = 1e-6, small problem.
+
+Expected structure (paper): PFAIT ≤ NFAIS2 ≈ NFAIS5 in wtime (no snapshot
+phase, no confirmation), comparable k_max.
+"""
+from benchmarks.common import csv_rows, print_rows, run_cell
+
+EPS = 1e-6
+PS = (4, 8, 16)
+N = 16
+
+
+def run(verbose: bool = True):
+    rows = []
+    for p in PS:
+        for proto in ("pfait", "nfais2", "nfais5"):
+            rows.append(run_cell(proto, EPS, N, p))
+    if verbose:
+        print_rows("Table 2 — wtime/k_max, ε=1e-6, n=%d³" % N, rows)
+        for p in PS:
+            sub = {r["protocol"]: r for r in rows if r["p"] == p}
+            ok = sub["pfait"]["wtime"] <= 1.05 * min(sub["nfais2"]["wtime"],
+                                                     sub["nfais5"]["wtime"])
+            print(f"  p={p}: PFAIT fastest: {ok}")
+    return csv_rows("table2", rows), rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Solves the paper's convection–diffusion problem with the TPU-native
+distributed fixed-point driver under all four detection modes, and shows
+the PFAIT trade: no protocol cost, stale detection, margin restores the
+precision guarantee.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)  # residuals below 1e-7 need f64
+
+import jax.numpy as jnp
+
+from repro.core import detection
+from repro.solvers import jacobi
+from repro.solvers.convdiff import Stencil, make_rhs
+from repro.solvers.fixed_point import SolverConfig, _zero_ghosts, ghosted, solve_single
+
+EPS_TILDE = 1e-6   # desired precision for ‖Ax − b‖∞
+N = 20             # 20³ interior grid
+
+
+def main() -> None:
+    st = Stencil.for_contraction(N, nu=1.0, a=(1.0, 1.0, 1.0), rho=0.95)
+    b = jnp.asarray(make_rhs(N, seed=0))
+
+    print(f"convection–diffusion {N}³, target ε̃ = {EPS_TILDE:.0e}\n")
+    print(f"{'mode':8s} {'ε used':>9s} {'outer':>6s} {'detected r':>11s} "
+          f"{'exact r*':>11s} {'r* < ε̃':>7s}")
+    for mode in ("sync", "pfait", "nfais2", "nfais5"):
+        mon = detection.for_mode(
+            mode, eps_tilde=EPS_TILDE, margin=10.0,   # PFAIT: ε = ε̃/10
+            staleness=0 if mode == "sync" else 4,      # K-stale reduction
+            persistence=4, ord=float("inf"),
+        )
+        cfg = SolverConfig(stencil=st, monitor=mon, inner_sweeps=2,
+                           max_outer=50_000)
+        r = solve_single(cfg, b)
+        g = ghosted(r.x, _zero_ghosts(r.x))
+        exact = float(jnp.max(jnp.abs(jacobi.residual_block(st, g, b))))
+        print(f"{mode:8s} {mon.eps:9.1e} {int(r.outer_iters):6d} "
+              f"{float(r.residual):11.2e} {exact:11.2e} "
+              f"{'yes' if exact < EPS_TILDE else 'NO':>7s}")
+
+    print("\nPFAIT pays extra iterations (tighter ε) but removes every\n"
+          "protocol synchronisation — on hardware that's the whole win.")
+
+
+if __name__ == "__main__":
+    main()

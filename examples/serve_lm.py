@@ -1,0 +1,21 @@
+"""Serving example: batched prefill + decode across cache families.
+
+Runs three backbone families (GQA transformer, pure SSM, hybrid windowed-
+attention+SSM) through the same serving driver — the decode loop's
+termination check is K-stale (PFAIT-style, see launch/serve.py).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    for arch in ("qwen2-1.5b", "mamba2-130m", "hymba-1.5b"):
+        out = serve(arch, batch=4, prompt_len=32, max_new=24, use_reduced=True)
+        print(f"{arch:14s} tokens {out['tokens'].shape} "
+              f"steps={out['steps']:3d} {out['tok_per_s']:7.1f} tok/s "
+              f"finished={out['finished'].sum()}/{len(out['finished'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model / shape / run configuration."""
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    SHAPES,
+    ModelConfig,
+    ParallelConfig,
+    RunConfig,
+    ShapeConfig,
+    reduced,
+)

@@ -1,0 +1,11 @@
+"""The paper's contribution: distributed asynchronous convergence detection.
+
+* ``residual``      — distributed residual evaluation r = σ(r_1, …, r_p)
+* ``detection``     — TPU-native ConvergenceMonitor (SYNC/PFAIT/NFAIS modes)
+* ``async_engine``  — event-driven asynchronous-iterations simulator
+* ``protocols``     — faithful event-level protocols (PFAIT, NFAIS2, NFAIS5,
+                      Chandy–Lamport exact snapshot)
+* ``termination``   — ε-threshold calibration methodology (paper §4.2)
+"""
+from repro.core import residual, termination  # noqa: F401
+from repro.core.detection import MonitorConfig, MonitorState, for_mode, init_state  # noqa: F401

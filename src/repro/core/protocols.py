@@ -1,0 +1,383 @@
+"""Faithful event-level detection protocols (paper §3 + refs [12, 15, 6]).
+
+Each protocol plugs into ``core.async_engine.AsyncEngine`` via four hooks:
+
+    on_start(engine, t)            — simulation begins
+    on_iteration(engine, i, t, r)  — worker i finished a sweep, local residual r
+    on_data(engine, msg, t)        — a computation message was delivered
+    on_message(engine, msg, t)     — a protocol message was delivered
+
+Implemented protocols:
+
+* ``PFAIT``             — the paper: successive non-blocking reductions over
+                          live local residuals; zero protocol messages.
+* ``NFAIS2``            — SB96-style snapshot [15]/[12]: snapshot messages
+                          *carry interface data* → consistent records, exact
+                          residual of the snapshot vector; O(n) msg bytes.
+* ``NFAIS5``            — approximate snapshot [12]: empty snapshot messages
+                          record last-delivered dependencies; persistence m +
+                          confirmation phase; O(1) msg bytes, residual exact
+                          up to (1+c(p,m))ε.
+* ``ExactSnapshotFIFO`` — Chandy–Lamport marker protocol [6] adapted to
+                          asynchronous iterations [12]; requires FIFO
+                          channels; consistent cut → exact residual.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.async_engine import AsyncEngine, Msg
+from repro.core.residual import combine_contributions
+
+
+class BaseProtocol:
+    name = "base"
+
+    def __init__(self, eps: float, ord: float = 2.0):
+        self.eps = float(eps)
+        self.ord = ord
+
+    def on_start(self, eng: AsyncEngine, t: float) -> None:  # pragma: no cover
+        pass
+
+    def on_iteration(self, eng: AsyncEngine, i: int, t: float, r_i: float) -> None:
+        pass
+
+    def on_data(self, eng: AsyncEngine, msg: Msg, t: float) -> None:
+        pass
+
+    def on_message(self, eng: AsyncEngine, msg: Msg, t: float) -> None:
+        pass
+
+    # shared helper: tree-reduction completion latency
+    def _reduce_latency(self, eng: AsyncEngine) -> float:
+        return 2 * math.ceil(math.log2(max(eng.p, 2))) * eng.cfg.hop_latency
+
+
+# ---------------------------------------------------------------------------
+# PFAIT — the paper's protocol-free termination
+# ---------------------------------------------------------------------------
+
+
+class PFAIT(BaseProtocol):
+    """Successive non-blocking reductions of free-running local residuals.
+
+    Contributions are sampled at staggered times from each worker's *live*
+    state (stale dependency views included) — the source of the detection
+    inconsistency the paper calibrates away with the ε-margin.
+    """
+
+    name = "pfait"
+
+    def on_start(self, eng: AsyncEngine, t: float) -> None:
+        self._launch(eng, t)
+
+    def _launch(self, eng: AsyncEngine, t: float) -> None:
+        if eng.detect_time is not None:
+            return
+
+        def complete(contribs: np.ndarray, tc: float) -> None:
+            g = combine_contributions(contribs, self.ord)
+            if g < self.eps:
+                eng.terminate(tc, g)
+            else:
+                self._launch(eng, tc)
+
+        eng.start_reduction(
+            sample_fn=lambda i, ts: eng.live_local_residual(i),
+            on_complete=complete,
+            t=t,
+        )
+
+
+# ---------------------------------------------------------------------------
+# NFAIS2 — snapshot carrying interface data (consistent records)
+# ---------------------------------------------------------------------------
+
+
+class NFAIS2(BaseProtocol):
+    """On local convergence: record own component, send snapshot messages
+    *containing the interface data* (protocol 2 of [12], after [15]).
+
+    The recorded global vector is consistent by construction, so the reduced
+    residual equals r(x̄_snapshot) exactly — at the cost of O(interface)
+    snapshot bytes.
+    """
+
+    name = "nfais2"
+
+    def __init__(self, eps: float, ord: float = 2.0):
+        super().__init__(eps, ord)
+        self.round = 0
+        self._reset_round_state = True
+
+    def on_start(self, eng: AsyncEngine, t: float) -> None:
+        p = eng.p
+        self.rec_own: List[Optional[np.ndarray]] = [None] * p
+        self.rec_deps: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
+        self._reducing = False
+
+    def _new_round(self) -> None:
+        self.round += 1
+        for i in range(len(self.rec_own)):
+            self.rec_own[i] = None
+            self.rec_deps[i] = dict()
+        self._reducing = False
+
+    def on_iteration(self, eng: AsyncEngine, i: int, t: float, r_i: float) -> None:
+        if eng.detect_time is not None:
+            return
+        if r_i < self.eps and self.rec_own[i] is None:
+            self.rec_own[i] = np.array(eng.x[i], copy=True)
+            for j in eng.problem.neighbors(i):
+                eng.send(
+                    Msg(src=i, dst=j, kind="snap2",
+                        payload=eng.problem.interface(i, eng.x[i], j),
+                        round=self.round),
+                    t,
+                )
+            self._maybe_reduce(eng, t)
+
+    def on_message(self, eng: AsyncEngine, msg: Msg, t: float) -> None:
+        if msg.kind != "snap2" or msg.round != self.round:
+            return
+        self.rec_deps[msg.dst][msg.src] = msg.payload
+        self._maybe_reduce(eng, t)
+
+    def _ready(self, eng: AsyncEngine, i: int) -> bool:
+        return self.rec_own[i] is not None and all(
+            j in self.rec_deps[i] for j in eng.problem.neighbors(i)
+        )
+
+    def _maybe_reduce(self, eng: AsyncEngine, t: float) -> None:
+        if self._reducing or eng.detect_time is not None:
+            return
+        if not all(self._ready(eng, i) for i in range(eng.p)):
+            return
+        self._reducing = True
+        contribs = np.array(
+            [
+                eng.problem.local_residual(i, self.rec_own[i], self.rec_deps[i])
+                for i in range(eng.p)
+            ]
+        )
+        eng.reductions_started += 1
+        g = combine_contributions(contribs, self.ord)
+        tc = t + self._reduce_latency(eng)
+
+        def complete(tt: float) -> None:
+            if g < self.eps:
+                eng.terminate(tt, g)
+            else:
+                self._new_round()
+
+        eng.schedule(tc, "callback", complete)
+
+
+# ---------------------------------------------------------------------------
+# NFAIS5 — approximate snapshot, empty messages + confirmation (O(1) bytes)
+# ---------------------------------------------------------------------------
+
+
+class NFAIS5(BaseProtocol):
+    """Protocol 5 of [12]: local convergence persisting m iterations triggers
+    an *empty* snapshot message; receivers record the last-delivered
+    dependency on that link; a confirmation after m further iterations
+    validates that local convergence persisted.  Records are only
+    approximately consistent — residual guaranteed up to (1+c(p,m))ε."""
+
+    name = "nfais5"
+
+    def __init__(self, eps: float, ord: float = 2.0, m: int = 4):
+        super().__init__(eps, ord)
+        self.m = int(m)
+        self.round = 0
+
+    def on_start(self, eng: AsyncEngine, t: float) -> None:
+        p = eng.p
+        self.rec_own: List[Optional[np.ndarray]] = [None] * p
+        self.rec_deps: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
+        self.consec = np.zeros(p, dtype=np.int64)   # consecutive sub-ε sweeps
+        self.supp = np.full(p, -1, dtype=np.int64)  # supplementary counter
+        self.confirmed = np.zeros(p, dtype=bool)
+        self._reducing = False
+
+    def _new_round(self) -> None:
+        self.round += 1
+        p = len(self.rec_own)
+        for i in range(p):
+            self.rec_own[i] = None
+            self.rec_deps[i] = dict()
+        self.supp[:] = -1
+        self.confirmed[:] = False
+        self._reducing = False
+
+    def on_iteration(self, eng: AsyncEngine, i: int, t: float, r_i: float) -> None:
+        if eng.detect_time is not None:
+            return
+        below = r_i < self.eps
+        self.consec[i] = self.consec[i] + 1 if below else 0
+
+        if not below and self.rec_own[i] is not None and not self.confirmed[i]:
+            # convergence lost inside the confirmation window → snapshot invalid
+            for j in eng.problem.neighbors(i):
+                eng.send(Msg(src=i, dst=j, kind="confirm5", payload=False,
+                             round=self.round), t)
+            self._new_round()
+            return
+
+        if self.rec_own[i] is None and self.consec[i] >= self.m:
+            # record + empty snapshot messages
+            self.rec_own[i] = np.array(eng.x[i], copy=True)
+            self.supp[i] = 0
+            for j in eng.problem.neighbors(i):
+                eng.send(Msg(src=i, dst=j, kind="snap5", round=self.round), t)
+            self._maybe_reduce(eng, t)
+        elif self.rec_own[i] is not None and not self.confirmed[i]:
+            self.supp[i] += 1
+            if self.supp[i] >= self.m:
+                # persistent → confirm
+                self.confirmed[i] = True
+                for j in eng.problem.neighbors(i):
+                    eng.send(Msg(src=i, dst=j, kind="confirm5", payload=True,
+                                 round=self.round), t)
+                self._maybe_reduce(eng, t)
+
+    def on_message(self, eng: AsyncEngine, msg: Msg, t: float) -> None:
+        if msg.round != self.round:
+            return
+        if msg.kind == "snap5":
+            dep = eng.deps[msg.dst].get(msg.src)
+            if dep is not None:
+                self.rec_deps[msg.dst][msg.src] = np.array(dep, copy=True)
+            self._maybe_reduce(eng, t)
+        elif msg.kind == "confirm5" and msg.payload is False:
+            if self.round == msg.round:
+                self._new_round()
+
+    def _ready(self, eng: AsyncEngine, i: int) -> bool:
+        return (
+            self.rec_own[i] is not None
+            and self.confirmed[i]
+            and all(j in self.rec_deps[i] for j in eng.problem.neighbors(i))
+        )
+
+    def _maybe_reduce(self, eng: AsyncEngine, t: float) -> None:
+        if self._reducing or eng.detect_time is not None:
+            return
+        if not all(self._ready(eng, i) for i in range(eng.p)):
+            return
+        self._reducing = True
+        contribs = np.array(
+            [
+                eng.problem.local_residual(i, self.rec_own[i], self.rec_deps[i])
+                for i in range(eng.p)
+            ]
+        )
+        eng.reductions_started += 1
+        g = combine_contributions(contribs, self.ord)
+        tc = t + self._reduce_latency(eng)
+
+        def complete(tt: float) -> None:
+            if g < self.eps:
+                eng.terminate(tt, g)
+            else:
+                self._new_round()
+
+        eng.schedule(tc, "callback", complete)
+
+
+# ---------------------------------------------------------------------------
+# Exact snapshot over FIFO channels (Chandy–Lamport markers)
+# ---------------------------------------------------------------------------
+
+
+class ExactSnapshotFIFO(BaseProtocol):
+    """Marker-based snapshot [6] adapted to asynchronous iterations [12]:
+    record on local convergence OR first marker of the round; on marker
+    reception record the last dependency delivered on that link.  FIFO
+    delivery makes the cut consistent → the reduced residual is exact."""
+
+    name = "exact_snapshot"
+
+    def __init__(self, eps: float, ord: float = 2.0):
+        super().__init__(eps, ord)
+        self.round = 0
+
+    def on_start(self, eng: AsyncEngine, t: float) -> None:
+        if not eng.cfg.fifo:
+            raise ValueError("ExactSnapshotFIFO requires cfg.fifo=True")
+        p = eng.p
+        self.rec_own: List[Optional[np.ndarray]] = [None] * p
+        self.rec_deps: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
+        self._reducing = False
+
+    def _new_round(self) -> None:
+        self.round += 1
+        for i in range(len(self.rec_own)):
+            self.rec_own[i] = None
+            self.rec_deps[i] = dict()
+        self._reducing = False
+
+    def _record_and_mark(self, eng: AsyncEngine, i: int, t: float) -> None:
+        self.rec_own[i] = np.array(eng.x[i], copy=True)
+        for j in eng.problem.neighbors(i):
+            eng.send(Msg(src=i, dst=j, kind="marker", round=self.round), t)
+
+    def on_iteration(self, eng: AsyncEngine, i: int, t: float, r_i: float) -> None:
+        if eng.detect_time is not None:
+            return
+        if r_i < self.eps and self.rec_own[i] is None:
+            self._record_and_mark(eng, i, t)
+            self._maybe_reduce(eng, t)
+
+    def on_message(self, eng: AsyncEngine, msg: Msg, t: float) -> None:
+        if msg.kind != "marker" or msg.round != self.round:
+            return
+        i = msg.dst
+        if self.rec_own[i] is None:
+            self._record_and_mark(eng, i, t)
+        dep = eng.deps[i].get(msg.src)
+        if dep is not None:
+            self.rec_deps[i][msg.src] = np.array(dep, copy=True)
+        self._maybe_reduce(eng, t)
+
+    def _ready(self, eng: AsyncEngine, i: int) -> bool:
+        return self.rec_own[i] is not None and all(
+            j in self.rec_deps[i] for j in eng.problem.neighbors(i)
+        )
+
+    def _maybe_reduce(self, eng: AsyncEngine, t: float) -> None:
+        if self._reducing or eng.detect_time is not None:
+            return
+        if not all(self._ready(eng, i) for i in range(eng.p)):
+            return
+        self._reducing = True
+        contribs = np.array(
+            [
+                eng.problem.local_residual(i, self.rec_own[i], self.rec_deps[i])
+                for i in range(eng.p)
+            ]
+        )
+        eng.reductions_started += 1
+        g = combine_contributions(contribs, self.ord)
+        tc = t + self._reduce_latency(eng)
+
+        def complete(tt: float) -> None:
+            if g < self.eps:
+                eng.terminate(tt, g)
+            else:
+                self._new_round()
+
+        eng.schedule(tc, "callback", complete)
+
+
+PROTOCOLS = {
+    "pfait": PFAIT,
+    "nfais2": NFAIS2,
+    "nfais5": NFAIS5,
+    "exact_snapshot": ExactSnapshotFIFO,
+}

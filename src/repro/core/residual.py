@@ -1,0 +1,89 @@
+"""Distributed residual-error evaluation (paper §2.2).
+
+A residual function ``r`` is distributed as ``r(x) = σ(r_1(x), …, r_p(x))``
+where each ``r_i`` is local to one worker and ``σ`` is a reduction.  For the
+l-norms of the paper,
+
+    r(x) = ‖x − f(x)‖_l,   r_i = (‖·‖^(i))^l,   σ(α) = (Σ α_j)^(1/l),
+
+and for the max-norm σ is the plain max.  These helpers work both on plain
+arrays (host / simulator) and inside ``shard_map`` bodies via
+``jax.lax.psum`` / ``jax.lax.pmax``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Ord = Union[int, float, str]
+
+
+def _as_ord(ord: Ord) -> float:
+    if ord in ("inf", "max", np.inf, float("inf")):
+        return float("inf")
+    return float(ord)
+
+
+def local_contribution(diff: jax.Array, ord: Ord = 2) -> jax.Array:
+    """``r_i``: the local, *pre-reduction* contribution of one worker.
+
+    For finite l this is ``Σ|d|^l`` (NOT the root — roots commute with the
+    global reduction only if taken after σ); for l=∞ it is ``max|d|``.
+    """
+    l = _as_ord(ord)
+    a = jnp.abs(diff.astype(jnp.float32))
+    if np.isinf(l):
+        return jnp.max(a) if a.size else jnp.float32(0)
+    if l == 2.0:
+        return jnp.sum(a * a)
+    return jnp.sum(a**l)
+
+
+def sigma(contributions: jax.Array, ord: Ord = 2) -> jax.Array:
+    """``σ``: reduce a vector of local contributions to the global residual."""
+    l = _as_ord(ord)
+    c = jnp.asarray(contributions)
+    if np.isinf(l):
+        return jnp.max(c)
+    s = jnp.sum(c)
+    if l == 2.0:
+        return jnp.sqrt(s)
+    return s ** (1.0 / l)
+
+
+def psum_sigma(contribution: jax.Array, axis_names, ord: Ord = 2) -> jax.Array:
+    """σ over mesh axes, for use inside ``shard_map`` — the SPMD analogue of
+    the paper's (non-blocking) reduction operation."""
+    l = _as_ord(ord)
+    if np.isinf(l):
+        return jax.lax.pmax(contribution, axis_names)
+    s = jax.lax.psum(contribution, axis_names)
+    if l == 2.0:
+        return jnp.sqrt(s)
+    return s ** (1.0 / l)
+
+
+def global_residual(x: jax.Array, fx: jax.Array, ord: Ord = 2) -> jax.Array:
+    """Reference (non-distributed) residual ``‖x − f(x)‖_l``."""
+    l = _as_ord(ord)
+    d = jnp.abs((x - fx).astype(jnp.float32))
+    if np.isinf(l):
+        return jnp.max(d)
+    if l == 2.0:
+        return jnp.sqrt(jnp.sum(d * d))
+    return jnp.sum(d**l) ** (1.0 / l)
+
+
+def combine_contributions(parts: Sequence[float], ord: Ord = 2) -> float:
+    """Host-side σ for the event simulator."""
+    l = _as_ord(ord)
+    arr = np.asarray(parts, dtype=np.float64)
+    if np.isinf(l):
+        return float(arr.max()) if arr.size else 0.0
+    s = float(arr.sum())
+    if l == 2.0:
+        return float(np.sqrt(s))
+    return float(s ** (1.0 / l))

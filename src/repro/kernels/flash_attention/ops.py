@@ -1,0 +1,42 @@
+"""jit'd wrapper: model-layout ⇄ kernel-layout dispatch for flash attention.
+
+``flash_attention`` accepts the model's grouped GQA layout
+(q [B,S,N,P,H], k/v [B,S,N,H]) and dispatches to the Pallas kernel on TPU
+(or interpret mode when forced), falling back to the blocked pure-jnp
+implementation elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_flat
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array,   # [B, S, N, P, H]
+    k: jax.Array,   # [B, S, N, H]
+    v: jax.Array,   # [B, S, N, H]
+    causal: bool = True,
+    window: int = 0,
+    interpret: Optional[bool] = None,
+):
+    B, S, N, P, H = q.shape
+    use_interp = False if interpret is None else interpret
+    if not _on_tpu() and not use_interp:
+        from repro.models.attention import attention_fwd
+
+        return attention_fwd(q, k, v, causal=causal, window=window)
+    qf = jnp.moveaxis(q, 1, 3).reshape(B * N * P, S, H)   # [B,N,P,S,H] → rows
+    kf = jnp.moveaxis(k, 1, 2).reshape(B * N, S, H)
+    vf = jnp.moveaxis(v, 1, 2).reshape(B * N, S, H)
+    out = flash_attention_flat(qf, kf, vf, causal=causal, window=window,
+                               interpret=use_interp)
+    out = out.reshape(B, N, P, S, H)
+    return jnp.moveaxis(out, 3, 1)  # [B,S,N,P,H]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel (naive, O(S²) memory)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q [BH, Sq, H], k/v [BN, Skv, H] → [BH, Sq, H]."""
+    BH, Sq, H = q.shape
+    BN, Skv, _ = k.shape
+    rep = BH // BN
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=0)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=0)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32), kf) / math.sqrt(H)
+    q_pos = jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkh->bqh", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,63 @@
+"""jit'd dispatch wrapper for the jacobi3d kernel.
+
+``sweep``/``residual_contribution`` are the entry points used by
+``solvers.fixed_point`` when ``SolverConfig.use_kernel`` is set; they fall
+back to the pure-jnp path (ref) off-TPU so the distributed driver runs
+everywhere.  ``interpret`` can be forced for validation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.jacobi3d.jacobi3d import fused_sweep_residual
+from repro.kernels.jacobi3d.ref import fused_sweep_residual_ref
+from repro.solvers.convdiff import Stencil
+
+
+def _coefs(st: Stencil) -> jnp.ndarray:
+    return jnp.asarray([st.diag, st.xm, st.xp, st.ym, st.yp, st.zm, st.zp])
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sweep_and_residual(
+    st: Stencil,
+    g: jax.Array,
+    b: jax.Array,
+    tile: Tuple[int, int] = (8, 128),
+    linf: bool = True,
+    interpret: Optional[bool] = None,
+):
+    """Fused sweep + residual partials; returns (new_block, partials)."""
+    use_interp = (not _on_tpu()) if interpret is None else interpret
+    if use_interp and not _on_tpu():
+        # off-TPU default: the jnp oracle (identical math, XLA-fused)
+        return fused_sweep_residual_ref(g, b, _coefs(st), tile=tile, linf=linf)
+    return fused_sweep_residual(g, b, _coefs(st), tile=tile, op="sweep",
+                                linf=linf, interpret=use_interp)
+
+
+def sweep(st: Stencil, g: jax.Array, b: jax.Array, sweep: str = "jacobi",
+          ox=0, oy=0, tile: Tuple[int, int] = (8, 128)):
+    """Sweep-only entry used by solvers.fixed_point (Jacobi flavour)."""
+    new, _ = sweep_and_residual(st, g, b, tile=tile)
+    return new
+
+
+def residual_contribution(st: Stencil, g: jax.Array, b: jax.Array,
+                          ord: float = float("inf"),
+                          tile: Tuple[int, int] = (8, 128)):
+    linf = np.isinf(ord)
+    if _on_tpu():
+        _, parts = fused_sweep_residual(g, b, _coefs(st), tile=tile,
+                                        op="residual", linf=linf)
+    else:
+        _, parts = fused_sweep_residual_ref(g, b, _coefs(st), tile=tile,
+                                            op="residual", linf=linf)
+    return jnp.max(parts) if linf else jnp.sum(parts)

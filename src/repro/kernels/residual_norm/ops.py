@@ -1,0 +1,26 @@
+"""jit'd wrapper: fused ‖a−b‖_l with platform dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.residual_norm.ref import diff_norm_partials_ref
+from repro.kernels.residual_norm.residual_norm import diff_norm_partials
+
+
+def diff_norm(a: jax.Array, b: jax.Array, ord: float = float("inf"),
+              interpret: Optional[bool] = None) -> jax.Array:
+    """‖a − b‖_ord, computed blockwise (kernel on TPU, jnp elsewhere)."""
+    linf = np.isinf(ord)
+    on_tpu = jax.default_backend() == "tpu"
+    use_interp = False if interpret is None else interpret
+    if on_tpu or use_interp:
+        parts = diff_norm_partials(a, b, linf=linf, interpret=use_interp)
+    else:
+        parts = diff_norm_partials_ref(a, b, linf=linf)
+    if linf:
+        return jnp.max(parts)
+    return jnp.sqrt(jnp.sum(parts))

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the residual_norm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def diff_norm_partials_ref(a, b, block: int = 65536, linf: bool = True):
+    af = a.reshape(-1).astype(jnp.float32)
+    bf = b.reshape(-1).astype(jnp.float32)
+    n = af.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        af = jnp.pad(af, (0, pad))
+        bf = jnp.pad(bf, (0, pad))
+    d = (af - bf).reshape(-1, block)
+    if linf:
+        return jnp.max(jnp.abs(d), axis=1)
+    return jnp.sum(d * d, axis=1)

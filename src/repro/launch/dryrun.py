@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the step the shape implies (train_step for
+``train_*``, prefill for ``prefill_*``, serve/decode step for ``decode_*`` /
+``long_*``) against the production mesh with ShapeDtypeStruct stand-ins (no
+allocation), compiles it, and records:
+
+  * ``memory_analysis()``  — per-device argument/output/temp bytes (fits?),
+  * ``cost_analysis()``    — per-partition HLO FLOPs and bytes accessed,
+  * collective traffic     — parsed from the compiled HLO (loop-aware),
+
+into a JSON report consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single          # 16×16
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi           # 2×16×16
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --solver               # paper PDE cell
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ALL_SHAPES, ParallelConfig
+from repro.configs.registry import ARCHS, cell_is_runnable, get_arch, get_shape
+from repro.core import detection
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.optim import AdamW, cosine_schedule
+
+
+def _sds(tree_struct, tree_spec, mesh):
+    """Pair ShapeDtypeStructs with NamedShardings."""
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        tree_struct, tree_spec,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _moment_dtype(cfg) -> Optional[str]:
+    # 100B+ models use bf16 moments so state fits one v5e pod (DESIGN §5)
+    return "bfloat16" if cfg.num_params() > 100e9 else "float32"
+
+
+def _microbatch_policy(cfg, shape, mesh) -> int:
+    """Grad-accumulation depth: keep the remat activation carry
+    (scan_steps × B_loc/m × S × D × 2 bytes) under ~2 GiB/device."""
+    ndev_dp = int(np.prod([v for k, v in mesh.shape.items() if k != "model"]))
+    b_loc = max(shape.global_batch // ndev_dp, 1)
+    steps = cfg.num_layers // (cfg.moe_layer_period if cfg.is_moe else 1)
+    target = 2 * 2**30
+    m = 1
+    while m < b_loc and steps * (b_loc // m) * shape.seq_len * cfg.d_model * 2 > target:
+        m *= 2
+    return m
+
+
+def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
+               parallel: Optional[ParallelConfig] = None,
+               capacity_factor: float = 1.0,
+               microbatch_override: Optional[int] = None,
+               variant: str = "baseline") -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    parallel = parallel or ParallelConfig()
+    model = Model(cfg, mesh=mesh, parallel=parallel, capacity_factor=capacity_factor)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt = AdamW(cosine_schedule(3e-4, 100, 10_000), moment_dtype=_moment_dtype(cfg))
+        micro = microbatch_override or _microbatch_policy(cfg, shape, mesh)
+        accum = "bfloat16" if cfg.num_params() > 100e9 else None
+        step_fn, _ = model.make_train_step(opt, microbatches=micro, accum_dtype=accum)
+        state_struct = jax.eval_shape(
+            lambda k: model.init_train_state(k, opt), jax.random.PRNGKey(0)
+        )
+        state_specs = model.train_state_specs(opt)
+        state_in = _sds(state_struct, state_specs, mesh)
+        ispecs = model.input_specs(shape)
+        batch_in = {k: _sds(v[0], v[1], mesh) for k, v in ispecs.items()}
+        jitted = jax.jit(step_fn, donate_argnums=(0,))
+        lowered = jitted.lower(state_in, batch_in)
+    elif shape.kind == "prefill":
+        fn = model.make_prefill()
+        params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params_in = _sds(params_struct, model.param_specs(), mesh)
+        ispecs = model.input_specs(shape)
+        inputs_in = _sds(ispecs["inputs"][0], ispecs["inputs"][1], mesh)
+        lowered = jax.jit(fn).lower(params_in, inputs_in)
+    else:  # decode
+        ring = shape.name == "long_500k" and cfg.attn_window > 0
+        fn = model.make_decode_step(ring=ring)
+        params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params_in = _sds(params_struct, model.param_specs(), mesh)
+        ispecs = model.input_specs(shape)
+        tokens_in = _sds(ispecs["inputs"][0], ispecs["inputs"][1], mesh)
+        cache_struct, cache_specs = ispecs["cache"]
+        cache_in = _sds(cache_struct, cache_specs, mesh)
+        clen = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+        lowered = jax.jit(fn, donate_argnums=(1,)).lower(params_in, cache_in, tokens_in, clen)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    pstats = hlo_analysis.program_stats(
+        text, default_group=int(np.prod(list(mesh.shape.values())))
+    )
+    coll = hlo_analysis.CollectiveStats(
+        counts=dict(pstats.coll_counts),
+        bytes_alg=dict(pstats.coll_bytes_alg),
+        bytes_wire=dict(pstats.coll_bytes_wire),
+    )
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_estimate_bytes": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        },
+        "cost": {
+            # cost_analysis counts while bodies once — kept for reference
+            "xla_flops_per_device": float(ca.get("flops", 0.0)),
+            "xla_bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+            # loop-aware parsed terms (used by the roofline)
+            "flops_per_device": float(pstats.flops),
+            "hbm_bytes_per_device": float(pstats.hbm_bytes),
+        },
+        "collectives": coll.as_dict(),
+        "model_params": int(cfg.num_params()),
+        "model_active_params": int(cfg.num_active_params()),
+    }
+    return rec
+
+
+def lower_solver_cell(multi_pod: bool, n: int = 1024, mode: str = "pfait") -> Dict[str, Any]:
+    """The paper's own workload: distributed convdiff solve (f32, TPU-real)."""
+    from repro.solvers.convdiff import Stencil
+    from repro.solvers.fixed_point import SolverConfig, make_sharded_solver
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax_x = ("pod", "data") if multi_pod else "data"
+    st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.95)
+    mon = detection.for_mode(mode, eps_tilde=1e-4, margin=10.0, staleness=4)
+    cfg = SolverConfig(stencil=st, monitor=mon, inner_sweeps=4, max_outer=20_000)
+    solve = make_sharded_solver(cfg, mesh, ax_x=ax_x, ax_y="model")
+    spec = P(ax_x, "model", None)
+    x0 = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, spec))
+    b = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, spec))
+    t0 = time.time()
+    lowered = jax.jit(solve).lower(x0, b)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    pstats = hlo_analysis.program_stats(
+        compiled.as_text(), default_group=int(np.prod(list(mesh.shape.values())))
+    )
+    coll = hlo_analysis.CollectiveStats(
+        counts=dict(pstats.coll_counts),
+        bytes_alg=dict(pstats.coll_bytes_alg),
+        bytes_wire=dict(pstats.coll_bytes_wire),
+    )
+    return {
+        "arch": f"convdiff-n{n}-{mode}",
+        "solver_max_outer": 20_000,  # loop-aware stats cover the full solve
+        "shape": "solver",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": "solver",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_estimate_bytes": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        },
+        "cost": {
+            "xla_flops_per_device": float(ca.get("flops", 0.0)),
+            "xla_bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+            "flops_per_device": float(pstats.flops),
+            "hbm_bytes_per_device": float(pstats.hbm_bytes),
+        },
+        "collectives": coll.as_dict(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--solver", action="store_true", help="also run the PDE solver cell")
+    ap.add_argument("--solver-only", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in ALL_SHAPES] if args.shape == "all" else args.shape.split(",")
+
+    records = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records}
+
+    t_start = time.time()
+    for multi in meshes:
+        mesh_name = "2x16x16" if multi else "16x16"
+        if not args.solver_only:
+            for a in archs:
+                for s in shapes:
+                    ok, why = cell_is_runnable(get_arch(a), get_shape(s))
+                    key = (a, s, mesh_name)
+                    if key in done:
+                        continue
+                    if not ok:
+                        records.append({"arch": a, "shape": s, "mesh": mesh_name,
+                                        "skipped": True, "reason": why})
+                        print(f"[skip] {a} × {s} × {mesh_name}: {why}", flush=True)
+                        continue
+                    try:
+                        rec = lower_cell(a, s, multi)
+                        records.append(rec)
+                        print(
+                            f"[ok]   {a} × {s} × {mesh_name}: "
+                            f"compile {rec['compile_s']}s, "
+                            f"{rec['cost']['flops_per_device']/1e9:.1f} GFLOP/dev, "
+                            f"peak {rec['memory']['peak_estimate_bytes']/2**30:.2f} GiB/dev, "
+                            f"wire {rec['collectives']['total_wire_bytes']/2**20:.1f} MiB/dev",
+                            flush=True,
+                        )
+                    except Exception as e:  # noqa: BLE001
+                        records.append({"arch": a, "shape": s, "mesh": mesh_name,
+                                        "error": f"{type(e).__name__}: {e}"})
+                        print(f"[FAIL] {a} × {s} × {mesh_name}: {e}", flush=True)
+                        traceback.print_exc()
+                    _save(records, args.out)
+        if args.solver or args.solver_only:
+            try:
+                rec = lower_solver_cell(multi)
+                records.append(rec)
+                print(f"[ok]   solver × {mesh_name}: compile {rec['compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001
+                records.append({"arch": "convdiff", "shape": "solver", "mesh": mesh_name,
+                                "error": f"{type(e).__name__}: {e}"})
+                print(f"[FAIL] solver × {mesh_name}: {e}", flush=True)
+                traceback.print_exc()
+            _save(records, args.out)
+
+    n_ok = sum(1 for r in records if "error" not in r and not r.get("skipped"))
+    n_fail = sum(1 for r in records if "error" in r)
+    n_skip = sum(1 for r in records if r.get("skipped"))
+    print(f"\ndry-run complete in {time.time()-t_start:.0f}s: "
+          f"{n_ok} ok, {n_fail} failed, {n_skip} skipped (documented N/A)")
+    _save(records, args.out)
+    if n_fail:
+        raise SystemExit(1)
+
+
+def _save(records, path):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

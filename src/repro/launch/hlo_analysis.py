@@ -1,0 +1,435 @@
+"""HLO-text analysis: loop-aware FLOP / HBM-byte / collective accounting.
+
+Why not just ``compiled.cost_analysis()``?  On this backend it counts each
+``while`` body **once**, but scan-over-layers puts ~all of the work inside a
+while loop — flops would be understated by the layer count.  We therefore
+parse the optimized HLO:
+
+* computations are split and mapped to **execution multipliers** by walking
+  ``while`` instructions (trip count extracted from the condition's
+  ``compare(counter, constant(N)), direction=LT`` pattern) and propagating
+  through ``calls=``/``to_apply=``/``body=``/``condition=`` edges;
+* **FLOPs** are summed over ``dot``/``convolution`` instructions
+  (2 · |result| · |contraction|) × multiplier;
+* **HBM bytes** are estimated at the buffer level: operand + result sizes of
+  instructions in HBM-level computations (ENTRY, loop bodies/conds, branches)
+  — fusion-internal traffic is excluded, matching post-fusion HBM behaviour;
+* **collective traffic** per op type with ring wire-byte factors.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+# op name comes right after the result type(s): "<types> opname(...)"
+_OP_RE = re.compile(r"(?:\}|\]|\))\s*([\w\-]+)\(")
+
+# ops that move no HBM bytes of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "custom-call", "iota",
+    "get-dimension-size", "opt-barrier",
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> List[List[int]]:
+    """All array shapes appearing in a type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append(dims)
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)  # name -> result type
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    header_re = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+    for raw in text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            if s.endswith("{"):
+                m = header_re.match(s)
+                if m and " = " not in s.split("(", 1)[0]:
+                    cur = Computation(m.group(1))
+                    comps[cur.name] = cur
+            continue
+        if s == "}" or s.startswith("} "):
+            cur = None
+            continue
+        mi = _INSTR_RE.match(s)
+        if not mi:
+            continue
+        name, rest = mi.group(1), mi.group(2)
+        mo = _OP_RE.search(rest)
+        if mo:
+            op = mo.group(1)
+            type_part = rest[: mo.start() + 1]
+            args_part = rest[mo.end():]
+        else:
+            # "type opname(...)": fall back to word before '('
+            mo2 = re.search(r"([\w\-]+)\(", rest)
+            if not mo2:
+                continue
+            op = mo2.group(1)
+            type_part = rest[: mo2.start()]
+            args_part = rest[mo2.end():]
+        # operands: names inside the first paren group
+        depth, end = 1, 0
+        for i, ch in enumerate(args_part):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _NAME_RE.findall(args_part[:end])
+        instr = Instr(name=name, result_type=type_part, op=op,
+                      operands=operands, line=s)
+        cur.instrs.append(instr)
+        cur.types[name] = type_part
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# Execution multipliers
+# ---------------------------------------------------------------------------
+
+
+def _trip_count(comp: Computation, comps: Dict[str, "Computation"]) -> int:
+    """Trip count of a while condition computation.
+
+    The loop bound is the (usually unique) integer constant in the condition;
+    the compare itself may be wrapped in a kLoop fusion, so we accept any
+    constant as the bound as long as a compare is reachable from here."""
+    consts = []
+    has_compare = False
+    for ins in comp.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                consts.append(int(m.group(1)))
+        if ins.op == "compare":
+            has_compare = True
+        m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+        if m and m.group(1) in comps:
+            if any(i.op == "compare" for i in comps[m.group(1)].instrs):
+                has_compare = True
+    if has_compare and consts:
+        return max(consts)
+    return 1
+
+
+def execution_multipliers(comps: Dict[str, Computation]) -> Tuple[Dict[str, int], Set[str]]:
+    """(multiplier per computation, HBM-level computation names)."""
+    mult: Dict[str, int] = defaultdict(lambda: 1)
+    hbm_level: Set[str] = set()
+    # ENTRY = the computation literally named ENTRY or containing the root —
+    # we detect it as any computation never referenced by others.
+    referenced: Set[str] = set()
+    edges: List[Tuple[str, str, int]] = []  # (parent, child, extra_mult)
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                if mb and mc and mc.group(1) in comps:
+                    tc = max(_trip_count(comps[mc.group(1)], comps), 1)
+                    edges.append((cname, mb.group(1), tc))
+                    edges.append((cname, mc.group(1), tc))
+                    referenced.update([mb.group(1), mc.group(1)])
+            for key in ("calls=", "to_apply=", "body=", "condition=",
+                        "branch_computations={", "called_computations={"):
+                for m in re.finditer(re.escape(key) + r"%?([\w\.\-,%]+)", ins.line):
+                    for nm in re.findall(r"[\w\.\-]+", m.group(1)):
+                        if nm in comps:
+                            referenced.add(nm)
+                            if key == "calls=" or (key == "to_apply=" and ins.op == "call"):
+                                edges.append((cname, nm, 1))
+    roots = [c for c in comps if c not in referenced]
+    for r in roots:
+        mult[r] = 1
+        hbm_level.add(r)
+    # propagate (few levels of nesting; fixpoint)
+    for _ in range(8):
+        changed = False
+        for parent, child, extra in edges:
+            m = mult[parent] * extra
+            if mult[child] < m:
+                mult[child] = m
+                changed = True
+        if not changed:
+            break
+    # HBM-level: roots + while bodies/conds + conditional branches + call
+    # targets (shard_map wraps its body in a `call`) — fixpoint over nesting
+    for _ in range(8):
+        added = False
+        for cname, comp in comps.items():
+            if cname not in hbm_level and cname not in {r for r in roots}:
+                pass
+            for ins in comp.instrs:
+                targets = []
+                if ins.op == "while":
+                    for key in ("body=", "condition="):
+                        m = re.search(key + r"%?([\w\.\-]+)", ins.line)
+                        if m:
+                            targets.append(m.group(1))
+                elif ins.op == "conditional":
+                    m = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                    if m:
+                        targets.extend(re.findall(r"[\w\.\-]+", m.group(1)))
+                elif ins.op == "call":
+                    m = re.search(r"to_apply=%?([\w\.\-]+)", ins.line)
+                    if m:
+                        targets.append(m.group(1))
+                else:
+                    continue
+                if cname in hbm_level:
+                    for t in targets:
+                        if t in comps and t not in hbm_level:
+                            hbm_level.add(t)
+                            added = True
+        if not added:
+            break
+    return dict(mult), hbm_level
+
+
+# ---------------------------------------------------------------------------
+# FLOPs (dot/convolution with trip counts)
+# ---------------------------------------------------------------------------
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res_shapes = shape_elems(ins.result_type)
+    if not res_shapes:
+        return 0.0
+    out_elems = 1
+    for d in res_shapes[0]:
+        out_elems *= d
+    # contraction size from lhs operand shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    contract = 1
+    if m and ins.operands:
+        lhs_type = comp.types.get(ins.operands[0], "")
+        lhs_shapes = shape_elems(lhs_type)
+        if lhs_shapes:
+            dims = lhs_shapes[0]
+            for di in m.group(1).split(","):
+                if di != "" and int(di) < len(dims):
+                    contract *= dims[int(di)]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class ProgramStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_counts: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_bytes_alg: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_bytes_wire: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    flops_unscaled: float = 0.0     # without loop multipliers (sanity)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.coll_bytes_wire.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": float(self.flops),
+            "flops_unscaled": float(self.flops_unscaled),
+            "hbm_bytes": float(self.hbm_bytes),
+            "collective_counts": {k: float(v) for k, v in self.coll_counts.items()},
+            "collective_bytes_alg": {k: float(v) for k, v in self.coll_bytes_alg.items()},
+            "collective_bytes_wire": {k: float(v) for k, v in self.coll_bytes_wire.items()},
+            "total_wire_bytes": float(self.total_wire_bytes),
+        }
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_factor(op: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op == "all-gather":
+        return (g - 1) / g
+    if op == "reduce-scatter":
+        return float(g - 1)  # result is the 1/g shard
+    if op == "all-to-all":
+        return (g - 1) / g
+    return 1.0  # collective-permute
+
+
+def program_stats(text: str, default_group: int = 256) -> ProgramStats:
+    comps = parse_module(text)
+    mult, hbm_level = execution_multipliers(comps)
+    st = ProgramStats()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1)
+        is_hbm = cname in hbm_level
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                f = _dot_flops(ins, comp)
+                st.flops += m * f
+                st.flops_unscaled += f
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in COLLECTIVES:
+                nbytes = shape_bytes(ins.result_type)
+                g = _group_size(ins.line, default_group)
+                st.coll_counts[base] += m
+                st.coll_bytes_alg[base] += m * nbytes
+                st.coll_bytes_wire[base] += m * nbytes * _wire_factor(base, g)
+            if is_hbm and ins.op not in _FREE_OPS and not ins.op.endswith("-done"):
+                st.hbm_bytes += m * _instr_hbm_bytes(ins, comp, comps)
+    return st
+
+
+def _fusion_operand_bytes(ins: Instr, comp: Computation,
+                          comps: Dict[str, Computation]) -> Optional[float]:
+    """Slice-aware operand traffic of a fusion: a parameter consumed only by
+    a dynamic-slice/gather inside the fusion body reads the *slice*, not the
+    full (possibly layer-stacked, GiB-sized) buffer."""
+    mm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+    if not mm or mm.group(1) not in comps:
+        return None
+    body = comps[mm.group(1)]
+    param_idx: Dict[str, int] = {}
+    for i2 in body.instrs:
+        if i2.op == "parameter":
+            mp = re.search(r"parameter\((\d+)\)", i2.line)
+            if mp:
+                param_idx[i2.name] = int(mp.group(1))
+    if not param_idx:
+        return None
+    consumed: Dict[int, float] = {}
+    for i2 in body.instrs:
+        for o in i2.operands:
+            if o not in param_idx:
+                continue
+            idx = param_idx[o]
+            if i2.op in ("dynamic-slice", "gather", "slice"):
+                b = float(shape_bytes(i2.result_type))
+            elif i2.op == "dynamic-update-slice":
+                # big buffer operand of a dus: traffic ≈ update size
+                others = [shape_bytes(body.types.get(oo, ""))
+                          for oo in i2.operands if oo != o]
+                b = float(min(others) if others else 0)
+            else:
+                b = float(shape_bytes(body.types.get(o, "")))
+            consumed[idx] = max(consumed.get(idx, 0.0), b)
+    total = 0.0
+    for k, o in enumerate(ins.operands):
+        full = float(shape_bytes(comp.types.get(o, "")))
+        total += min(consumed.get(k, full), full)
+    return total
+
+
+def _instr_hbm_bytes(ins: Instr, comp: Computation,
+                     comps: Dict[str, Computation]) -> float:
+    """HBM-traffic estimate for one buffer-level instruction.
+
+    In-place slice updates (scan writing per-layer activations/caches) touch
+    only the slice, not the carried buffer; slicing/gather reads only what it
+    returns; fusions are slice-aware (see _fusion_operand_bytes)."""
+    res = shape_bytes(ins.result_type)
+    ops = [shape_bytes(comp.types.get(o, "")) for o in ins.operands]
+    key = ins.op + " " + ins.name
+    if "dynamic-update-slice" in key or "scatter" in key:
+        small = sum(ops) - (max(ops) if ops else 0)
+        return 2.0 * small
+    if "dynamic-slice" in key or "gather" in key or ins.op == "slice":
+        return 2.0 * res
+    if ins.op == "fusion":
+        fb = _fusion_operand_bytes(ins, comp, comps)
+        if fb is not None:
+            return res + fb
+    if ins.op == "while":
+        # carry ping-pong is aliased in place; don't charge the tuple
+        return 0.0
+    return res + sum(ops)
+
+
+# Back-compat shim used by dryrun
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, float]
+    bytes_alg: Dict[str, float]
+    bytes_wire: Dict[str, float]
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.bytes_wire.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "counts": dict(self.counts),
+            "bytes_alg": dict(self.bytes_alg),
+            "bytes_wire": dict(self.bytes_wire),
+            "total_wire_bytes": float(self.total_wire_bytes),
+        }
+
+
+def collective_stats(hlo_text: str, default_group: int = 256) -> CollectiveStats:
+    st = program_stats(hlo_text, default_group)
+    return CollectiveStats(
+        counts=dict(st.coll_counts),
+        bytes_alg=dict(st.coll_bytes_alg),
+        bytes_wire=dict(st.coll_bytes_wire),
+    )

@@ -1,0 +1,3 @@
+"""Model substrate: decoder backbones for the 10 assigned architectures."""
+from repro.models.model import Model, TrainState  # noqa: F401
+from repro.models.transformer import ModelPlan, make_plan  # noqa: F401

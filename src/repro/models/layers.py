@@ -1,0 +1,108 @@
+"""Common layers: norms, RoPE, MLPs, embeddings — pure-jnp, dtype-explicit.
+
+Parameter pytrees are plain dicts; initializers take an rng key and return
+arrays in the config dtype.  All code paths work under jit / scan / shard_map.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exps = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exps)  # [hd/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, hd] (hd trailing), positions: broadcastable to [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int, gated: bool, dtype) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    p = {
+        "w1": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (f, d)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["w3"] = (jax.random.normal(k3, (d, f)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, gated: bool, constrain=None,
+              tp_reduce=None) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w1"])
+    if gated:
+        h = jax.nn.silu(h) * jnp.einsum("...d,df->...f", x, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    if constrain is not None:
+        h = constrain(h)
+    if tp_reduce is not None:
+        return tp_reduce(h, p["w2"])
+    return jnp.einsum("...f,fd->...d", h, p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def embed_lookup(emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(emb, tokens, axis=0)
+
+
+def lm_head(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [..., d] × w [vocab, d] → logits [..., vocab] (f32)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,506 @@
+"""Top-level model API: build, shard, train, serve.
+
+``Model`` ties together the backbone (models/transformer.py), the TP/EP
+plans, PartitionSpecs for every parameter/cache leaf, the chunked
+cross-entropy loss, gradient fix-ups (kv-replica tying, padding masks), and
+the jit-able ``train_step`` / ``prefill`` / ``decode_step`` functions that
+launch/dryrun.py lowers on the production meshes.
+
+Convergence-detection integration (the paper's technique): the train step
+carries a ``core.detection.MonitorState`` — the training-loss reduction is
+pushed through the K-stale ring exactly like the solver residual, so the
+stop-decision never fences the step. The host polls the on-device
+``converged`` flag asynchronously (see launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core import detection
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import ssm as ssm_mod
+from repro.models.transformer import (
+    LayerCtx,
+    ModelPlan,
+    forward,
+    init_params,
+    make_plan,
+)
+from repro.optim.adamw import AdamState, AdamW, apply_updates, global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    monitor: detection.MonitorState
+    step: jax.Array
+
+
+class Model:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh: Optional[Mesh] = None,
+        parallel: ParallelConfig = ParallelConfig(),
+        capacity_factor: float = 1.0,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.parallel = parallel
+        tp = int(mesh.shape["model"]) if mesh is not None else 1
+        self.plan = make_plan(cfg, tp, capacity_factor)
+        if mesh is not None:
+            self.dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+        else:
+            self.dp_axes = ()
+        self._fsdp = "data" if (parallel.fsdp and mesh is not None) else None
+
+    # ------------------------------------------------------------------
+    # Params
+    # ------------------------------------------------------------------
+    def init(self, key) -> Any:
+        return init_params(key, self.plan)
+
+    def _sublayer_specs(self, is_moe_layer: bool) -> Dict[str, Any]:
+        cfg, d = self.cfg, self._fsdp
+        sp: Dict[str, Any] = {"ln1": P(None, None)}
+        if cfg.has_attention:
+            a = {
+                "wq": P(None, d, "model", None, None),
+                "wk": P(None, d, "model", None),
+                "wv": P(None, d, "model", None),
+                "wo": P(None, "model", None, None, d),
+            }
+            if cfg.qkv_bias:
+                a.update(bq=P(None, "model", None, None), bk=P(None, "model", None),
+                         bv=P(None, "model", None))
+            sp["attn"] = a
+        if cfg.has_ssm:
+            sp["ssm"] = {
+                "w_z": P(None, d, "model"),
+                "w_x": P(None, d, "model"),
+                "w_B": P(None, d, None),
+                "w_C": P(None, d, None),
+                "w_dt": P(None, d, "model"),
+                "conv_x": P(None, None, "model"),
+                "conv_B": P(None, None, None),
+                "conv_C": P(None, None, None),
+                "A_log": P(None, "model"),
+                "D_skip": P(None, "model"),
+                "dt_bias": P(None, "model"),
+                "norm": P(None, "model"),
+                "out_proj": P(None, "model", d),
+            }
+        if cfg.d_ff > 0:
+            sp["ln2"] = P(None, None)
+            mlp = {"w1": P(None, d, "model"), "w2": P(None, "model", d)}
+            if cfg.gated_mlp:
+                mlp["w3"] = P(None, d, "model")
+            if is_moe_layer:
+                # EP over model, expert-TP over data on d_ff (see moe.py)
+                moe = {
+                    "router": P(None, None, None),
+                    "w1": P(None, "model", None, d),
+                    "w2": P(None, "model", d, None),
+                }
+                if cfg.gated_mlp:
+                    moe["w3"] = P(None, "model", None, d)
+                sp["moe"] = moe
+                if cfg.shared_expert:
+                    sp["shared"] = dict(mlp)
+            else:
+                sp["mlp"] = dict(mlp)
+        return sp
+
+    def param_specs(self) -> Any:
+        cfg = self.cfg
+        mask = cfg.moe_layer_mask()
+        period = self.plan.period
+        specs: Dict[str, Any] = {"final_norm": P(None)}
+        if cfg.frontend is None:
+            # vocab-sharded: GSPMD lowers the lookup to clamp+mask+all-reduce
+            # (the robust path), and the tied LM head needs no reshard
+            specs["embed"] = P("model", None)
+        else:
+            specs["frontend_proj"] = P(None, "model")
+        if not cfg.tie_embeddings or cfg.frontend is not None:
+            # vocab-sharded, D replicated: the loss einsum then needs no
+            # collective at all (batch over dp × vocab over model)
+            specs["lm_head"] = P("model", None)
+        specs["layers"] = tuple(self._sublayer_specs(mask[j]) for j in range(period))
+        return specs
+
+    def param_shardings(self) -> Any:
+        assert self.mesh is not None
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.param_specs(),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    # ------------------------------------------------------------------
+    # Gradient fix-ups: tie kv replicas, mask padded heads/vocab
+    # ------------------------------------------------------------------
+    def apply_grad_fixups(self, grads: Any) -> Any:
+        cfg, plan = self.cfg, self.plan
+        if cfg.has_attention and plan.attn is not None:
+            ap = plan.attn
+            qmask = attn_mod.q_valid_mask(ap)
+
+            def fix_unit(unit):
+                unit = dict(unit)
+                a = dict(unit["attn"])
+                if ap.kv_repl > 1:
+                    for w in ("wk", "wv"):
+                        g = a[w]  # [steps, D, slots, H]
+                        s = g.shape
+                        gg = g.reshape(s[0], s[1], ap.groups, ap.kv_repl, s[3])
+                        gg = jnp.broadcast_to(
+                            jnp.sum(gg, axis=3, keepdims=True), gg.shape
+                        )
+                        a[w] = gg.reshape(s)
+                    for bname in ("bk", "bv"):
+                        if bname in a:
+                            g = a[bname]  # [steps, slots, H]
+                            s = g.shape
+                            gg = g.reshape(s[0], ap.groups, ap.kv_repl, s[2])
+                            gg = jnp.broadcast_to(jnp.sum(gg, 2, keepdims=True), gg.shape)
+                            a[bname] = gg.reshape(s)
+                a["wo"] = a["wo"] * qmask[None, :, :, None, None]
+                unit["attn"] = a
+                return unit
+
+            grads = dict(grads)
+            grads["layers"] = tuple(fix_unit(u) if "attn" in u else u for u in grads["layers"])
+        if cfg.has_ssm and plan.ssm is not None:
+            hmask = ssm_mod.head_valid_mask(plan.ssm).repeat(plan.ssm.head_dim)
+
+            def fix_ssm(unit):
+                unit = dict(unit)
+                s = dict(unit["ssm"])
+                s["out_proj"] = s["out_proj"] * hmask[None, :, None]
+                unit["ssm"] = s
+                return unit
+
+            grads = dict(grads)
+            grads["layers"] = tuple(fix_ssm(u) if "ssm" in u else u for u in grads["layers"])
+        # padded vocab rows
+        for k in ("embed", "lm_head"):
+            if isinstance(grads, dict) and k in grads:
+                vmask = (jnp.arange(self.plan.vocab_padded) < cfg.vocab_size)
+                grads[k] = grads[k] * vmask[:, None].astype(grads[k].dtype)
+        return grads
+
+    # ------------------------------------------------------------------
+    # Forward / loss
+    # ------------------------------------------------------------------
+    def _ctx(self, mode: str, ring: bool = False) -> LayerCtx:
+        c_act = c_head = c_ffn = None
+        if self.mesh is not None:
+            mesh, dp = self.mesh, self.dp_axes
+
+            def _c(x, *lead):
+                spec = P(*lead, *([None] * (x.ndim - len(lead))))
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+            c_act = lambda x: _c(x, dp, None)
+            c_head = lambda x: _c(x, dp, None, "model")
+            c_ffn = lambda x: _c(x, dp, None, "model")
+        return LayerCtx(
+            plan=self.plan,
+            mode=mode,
+            window=self.cfg.attn_window,
+            use_kernel=False,
+            mesh=self.mesh,
+            dp_axes=self.dp_axes,
+            ring=ring,
+            c_act=c_act,
+            c_head=c_head,
+            c_ffn=c_ffn,
+            attn_impl=self.parallel.attn_impl,
+            tp_reduce=self._tp_reduce() if mode == "train" else None,
+            remat=self.parallel.remat,
+        )
+
+    def _tp_reduce(self):
+        if not self.parallel.tp_reduce_bf16 or self.mesh is None:
+            return None
+        from functools import partial as _partial
+
+        from repro.models.tp_reduce import tp_matmul_psum
+
+        return _partial(tp_matmul_psum, mesh=self.mesh, dp_axes=self.dp_axes)
+
+    def _constrain(self, x, spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def loss_fn(self, params, batch, seq_chunk: int = 512):
+        """Chunked softmax cross-entropy; returns (loss, metrics)."""
+        cfg = self.cfg
+        inputs = batch["inputs"]
+        labels = batch["labels"]
+        x, head, _, aux = forward(params, inputs, self.plan, self._ctx("train"))
+        # vocab-sharded head → the loss einsum needs no collectives (matters
+        # for tied embeddings, which are stored D-sharded for the lookup)
+        head = self._constrain(head, P("model", None))
+        B, S, D = x.shape
+        seq_chunk = min(seq_chunk, S)
+        assert S % seq_chunk == 0
+        nchunk = S // seq_chunk
+        xc = x.reshape(B, nchunk, seq_chunk, D)
+        lc = labels.reshape(B, nchunk, seq_chunk)
+        vocab = cfg.vocab_size
+        vpad = self.plan.vocab_padded
+
+        @jax.checkpoint
+        def chunk_nll(xb, lb):
+            logits = L.lm_head(xb, head)  # [B, c, Vpad] f32
+            logits = self._constrain(logits, P(self.dp_axes or None, None, "model"))
+            vmask = jnp.arange(vpad) < vocab
+            logits = jnp.where(vmask, logits, -1e30)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            # gold logit via masked reduction — stays sharded over vocab
+            # (take_along_axis would force an all-gather of the logits)
+            sel = jnp.arange(vpad)[None, None, :] == lb[..., None]
+            gold = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+            return jnp.sum(lse - gold)
+
+        def scan_body(tot, idx):
+            return tot + chunk_nll(xc[:, idx], lc[:, idx]), None
+
+        total, _ = jax.lax.scan(scan_body, jnp.zeros((), jnp.float32), jnp.arange(nchunk))
+        ntok = B * S
+        loss = total / ntok
+        if cfg.is_moe:
+            loss = loss + 0.01 * aux / max(self.cfg.num_layers, 1)
+        return loss, {"nll": total / ntok, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # Train step
+    # ------------------------------------------------------------------
+    def make_train_step(
+        self,
+        optimizer: AdamW,
+        monitor: Optional[detection.MonitorConfig] = None,
+        microbatches: int = 1,
+        accum_dtype: Optional[str] = None,   # None → f32; "bfloat16" for 100B+
+    ):
+        monitor = monitor or detection.MonitorConfig(
+            mode=self.parallel.monitor_mode,
+            eps=1e-2, eps_tilde=1e-2, ord=1.0,
+            staleness=self.parallel.monitor_staleness,
+        )
+        adt = jnp.dtype(accum_dtype) if accum_dtype else jnp.float32
+
+        def grads_of(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(self.loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+        def train_step(state: TrainState, batch):
+            if microbatches <= 1:
+                loss, metrics, grads = grads_of(state.params, batch)
+            else:
+                # gradient accumulation: scan over microbatches so live
+                # activations scale with B/microbatches
+                mb = jax.tree.map(
+                    lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                        + x.shape[1:]),
+                    batch,
+                )
+                gsum0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), state.params)
+
+                def micro(carry, b):
+                    gsum, lsum = carry
+                    loss, _, grads = grads_of(state.params, b)
+                    gsum = jax.tree.map(lambda a, g: a + g.astype(adt), gsum, grads)
+                    return (gsum, lsum + loss), None
+
+                (gsum, lsum), _ = jax.lax.scan(
+                    micro, (gsum0, jnp.zeros((), jnp.float32)), mb
+                )
+                grads = jax.tree.map(lambda g: (g / microbatches), gsum)
+                loss = lsum / microbatches
+                metrics = {}
+            grads = self.apply_grad_fixups(grads)
+            updates, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+            params = apply_updates(state.params, updates)
+            # PFAIT: push the (already globally-reduced) loss through the
+            # K-stale ring; converged flag is read by the host asynchronously.
+            mon = detection.step(monitor, state.monitor, loss, axis_names=None)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                           converged=mon.converged)
+            return TrainState(params=params, opt=opt, monitor=mon,
+                              step=state.step + 1), metrics
+
+        return train_step, monitor
+
+    def init_train_state(self, key, optimizer: AdamW,
+                         monitor: Optional[detection.MonitorConfig] = None) -> TrainState:
+        params = self.init(key)
+        monitor = monitor or detection.MonitorConfig(
+            mode=self.parallel.monitor_mode, eps=1e-2, eps_tilde=1e-2,
+            ord=1.0, staleness=self.parallel.monitor_staleness,
+        )
+        return TrainState(
+            params=params,
+            opt=optimizer.init(params),
+            monitor=detection.init_state(monitor),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def train_state_specs(self, optimizer: AdamW) -> Any:
+        ps = self.param_specs()
+        return TrainState(
+            params=ps,
+            opt=AdamState(step=P(), m=ps, v=ps),
+            monitor=jax.tree.map(lambda _: P(), detection.init_state(
+                detection.MonitorConfig(mode="pfait", eps=1.0, eps_tilde=1.0))),
+            step=P(),
+        )
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+    def cache_struct(self, batch: int, max_len: int, ring: bool = False,
+                     as_struct: bool = True):
+        """Stacked decode-cache pytree ([steps] leading) of zeros or
+        ShapeDtypeStructs."""
+        cfg, plan = self.cfg, self.plan
+        dtype = L.dtype_of(cfg.dtype)
+        steps, period = plan.scan_steps, plan.period
+        S_kv = min(max_len, cfg.attn_window) if (ring and cfg.attn_window) else max_len
+
+        def mk(shape, dt):
+            if as_struct:
+                return jax.ShapeDtypeStruct((steps,) + shape, dt)
+            return jnp.zeros((steps,) + shape, dt)
+
+        unit = []
+        for _ in range(period):
+            entry: Dict[str, Any] = {}
+            if cfg.has_attention:
+                ap = plan.attn
+                entry["kv"] = {
+                    "k": mk((batch, S_kv, ap.slots, ap.head_dim), dtype),
+                    "v": mk((batch, S_kv, ap.slots, ap.head_dim), dtype),
+                }
+            if cfg.has_ssm:
+                sp = plan.ssm
+                gn = sp.groups * sp.state
+                entry["ssm"] = ssm_mod.SSMCache(
+                    h=mk((batch, sp.heads_padded, sp.head_dim, sp.state), jnp.float32),
+                    conv_x=mk((batch, sp.conv_width - 1, sp.d_inner), dtype),
+                    conv_B=mk((batch, sp.conv_width - 1, gn), dtype),
+                    conv_C=mk((batch, sp.conv_width - 1, gn), dtype),
+                )
+            unit.append(entry)
+        return tuple(unit)
+
+    def cache_specs(self, batch_shardable: bool = True) -> Any:
+        cfg = self.cfg
+        dp = self.dp_axes if batch_shardable else None
+
+        def kv_spec():
+            return {"k": P(None, dp, None, "model", None),
+                    "v": P(None, dp, None, "model", None)}
+
+        unit = []
+        for _ in range(self.plan.period):
+            entry: Dict[str, Any] = {}
+            if cfg.has_attention:
+                entry["kv"] = kv_spec()
+            if cfg.has_ssm:
+                entry["ssm"] = ssm_mod.SSMCache(
+                    h=P(None, dp, "model", None, None),
+                    conv_x=P(None, dp, None, "model"),
+                    conv_B=P(None, dp, None, None),
+                    conv_C=P(None, dp, None, None),
+                )
+            unit.append(entry)
+        return tuple(unit)
+
+    def make_prefill(self):
+        """prefill(params, inputs) → (last-position logits, cache)."""
+
+        def prefill(params, inputs):
+            x, head, cache, _ = forward(params, inputs, self.plan, self._ctx("prefill"))
+            head = self._constrain(head, P("model", None))
+            logits = L.lm_head(x[:, -1:], head)
+            return logits, cache
+
+        return prefill
+
+    def make_decode_step(self, ring: bool = False):
+        """decode(params, cache, tokens [B,1] or embeds, cache_len) →
+        (logits [B,1,V], new_cache)."""
+
+        def decode(params, cache, tokens, cache_len):
+            x, head, new_cache, _ = forward(
+                params, tokens, self.plan, self._ctx("decode", ring=ring),
+                cache=cache, cache_len=cache_len,
+            )
+            head = self._constrain(head, P("model", None))
+            logits = L.lm_head(x, head)
+            return logits, new_cache
+
+        return decode
+
+    # ------------------------------------------------------------------
+    # Input specs (dry-run stand-ins)
+    # ------------------------------------------------------------------
+    def batch_spec(self, shape: ShapeConfig) -> P:
+        B = shape.global_batch
+        ndev = int(np.prod([self.mesh.shape[a] for a in self.dp_axes])) if self.mesh else 1
+        return P(self.dp_axes if (ndev > 1 and B % ndev == 0) else None)
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStructs (+ PartitionSpecs) for the step the shape implies."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        bspec = self.batch_spec(shape)
+        bp = bspec[0] if len(bspec) else None
+        out: Dict[str, Any] = {}
+        if shape.kind == "train":
+            if cfg.frontend is None:
+                out["inputs"] = (jax.ShapeDtypeStruct((B, S), jnp.int32), P(bp, None))
+            else:
+                out["inputs"] = (
+                    jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), L.dtype_of(cfg.dtype)),
+                    P(bp, None, None),
+                )
+            out["labels"] = (jax.ShapeDtypeStruct((B, S), jnp.int32), P(bp, None))
+        elif shape.kind == "prefill":
+            if cfg.frontend is None:
+                out["inputs"] = (jax.ShapeDtypeStruct((B, S), jnp.int32), P(bp, None))
+            else:
+                out["inputs"] = (
+                    jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), L.dtype_of(cfg.dtype)),
+                    P(bp, None, None),
+                )
+        else:  # decode
+            ring = shape.name == "long_500k" and cfg.attn_window > 0
+            if cfg.frontend is None:
+                out["inputs"] = (jax.ShapeDtypeStruct((B, 1), jnp.int32), P(bp, None))
+            else:
+                out["inputs"] = (
+                    jax.ShapeDtypeStruct((B, 1, cfg.frontend_dim), L.dtype_of(cfg.dtype)),
+                    P(bp, None, None),
+                )
+            cache = self.cache_struct(B, S, ring=ring, as_struct=True)
+            cspecs = self.cache_specs(batch_shardable=(bp is not None))
+            out["cache"] = (cache, cspecs)
+            out["cache_len"] = (jax.ShapeDtypeStruct((), jnp.int32), P())
+        return out

@@ -1,0 +1,270 @@
+"""Mamba2 (SSD — state-space duality) blocks, TPU-shaped.
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like math
+inside Q-sized chunks (MXU-friendly batched matmuls) + a tiny sequential
+scan over chunk states — O(S·Q) memory instead of O(S²) and no
+per-timestep recurrence.  Decode is the O(1) state update.
+
+Head padding mirrors attention: SSD heads are padded to a multiple of the
+TP width; padded heads are neutralised by zero (grad-masked) out-proj rows.
+Weights are stored stream-split (z, x, B, C, dt separately) so each stream
+gets its natural sharding (heads over model axis; B/C replicated — they are
+per-group, groups=1 in the assigned archs).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ceil_to, rmsnorm
+
+
+@dataclass(frozen=True)
+class SSMPlan:
+    d_model: int
+    heads: int            # original nh
+    heads_padded: int
+    head_dim: int         # P
+    state: int            # N
+    groups: int
+    conv_width: int
+    tp: int
+
+    @property
+    def d_inner(self) -> int:
+        return self.heads_padded * self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.groups * self.state
+
+
+def plan_ssm(cfg, tp: int) -> SSMPlan:
+    nh = cfg.resolved_ssm_heads
+    return SSMPlan(
+        d_model=cfg.d_model,
+        heads=nh,
+        heads_padded=ceil_to(nh, tp),
+        head_dim=cfg.ssm_head_dim,
+        state=cfg.ssm_state,
+        groups=cfg.ssm_groups,
+        conv_width=cfg.ssm_conv_width,
+        tp=tp,
+    )
+
+
+def ssm_init(key, plan: SSMPlan, dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 8)
+    D, di = plan.d_model, plan.d_inner
+    gn = plan.groups * plan.state
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "w_z": (jax.random.normal(ks[0], (D, di)) * s).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (D, di)) * s).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (D, gn)) * s).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (D, gn)) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (D, plan.heads_padded)) * s).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (plan.conv_width, di)) * 0.2).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (plan.conv_width, gn)) * 0.2).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (plan.conv_width, gn)) * 0.2).astype(dtype),
+        "A_log": jnp.zeros((plan.heads_padded,), jnp.float32),
+        "D_skip": jnp.ones((plan.heads_padded,), jnp.float32),
+        "dt_bias": jnp.zeros((plan.heads_padded,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": (
+            jax.random.normal(jax.random.fold_in(key, 9), (di, D)) / math.sqrt(di)
+        ).astype(dtype),
+    }
+    # neutralise padded heads in the output projection
+    p["out_proj"] = (
+        p["out_proj"] * head_valid_mask(plan).repeat(plan.head_dim)[:, None]
+    ).astype(dtype)
+    return p
+
+
+def head_valid_mask(plan: SSMPlan) -> jnp.ndarray:
+    m = np.zeros((plan.heads_padded,), np.float32)
+    m[: plan.heads] = 1.0
+    return jnp.asarray(m)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """x [B,S,C], w [W,C] depthwise causal conv.  With ``state`` [B,W-1,C]
+    (decode or chunk-continuation), prepends it; returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return jax.nn.silu(y), new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,      # [B,S,nh,P]
+    dt: jax.Array,     # [B,S,nh]   (post-softplus)
+    A: jax.Array,      # [nh]       (negative)
+    Bm: jax.Array,     # [B,S,G,N]
+    Cm: jax.Array,     # [B,S,G,N]
+    chunk: int = 128,
+    h0: Optional[jax.Array] = None,  # [B,nh,P,N] initial state
+):
+    """Returns (y [B,S,nh,P], h_final [B,nh,P,N])."""
+    Bsz, S, nh, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "sequence must be a multiple of the SSD chunk"
+    nc = S // chunk
+    rep = nh // G
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, nh, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, chunk, nh)
+    Bf = Bm.astype(jnp.float32).reshape(Bsz, nc, chunk, G, N)
+    Cf = Cm.astype(jnp.float32).reshape(Bsz, nc, chunk, G, N)
+    Bh = jnp.repeat(Bf, rep, axis=3)  # [B,nc,Q,nh,N]
+    Ch = jnp.repeat(Cf, rep, axis=3)
+
+    dA = dtf * A[None, None, None, :]                 # [B,nc,Q,nh], ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumulative
+    total = cum[:, :, -1, :]                          # [B,nc,nh]
+    xb = xf * dtf[..., None]                          # dt-scaled input
+
+    # --- intra-chunk (quadratic, masked) ---
+    # scores[t,s] = (C_t·B_s) exp(cum_t − cum_s), s ≤ t
+    cb = jnp.einsum("bcthn,bcshn->bchts", Ch, Bh)     # [B,nc,nh,Q,Q]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,Qt,Qs,nh]
+    decay = jnp.moveaxis(decay, -1, 2)                # [B,nc,nh,Qt,Qs]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    scores = jnp.where(mask[None, None, None], cb * decay, 0.0)
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", scores, xb)
+
+    # --- chunk states ---
+    dec_end = jnp.exp(total[:, :, None, :] - cum)     # [B,nc,Q,nh]
+    S_c = jnp.einsum("bcshn,bcshp,bcsh->bchpn", Bh, xb, dec_end)  # [B,nc,nh,P,N]
+
+    # --- inter-chunk scan ---
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, P, N), jnp.float32)
+
+    def scan_fn(h, inp):
+        s_c, tot = inp
+        h_prev = h
+        h = jnp.exp(tot)[:, :, None, None] * h + s_c
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)             # [B,nc,nh,P,N] — state entering chunk
+
+    # --- inter-chunk contribution ---
+    y_inter = jnp.einsum("bcthn,bchpn,bcth->bcthp", Ch, h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    x: jax.Array,     # [B,nh,P]
+    dt: jax.Array,    # [B,nh]
+    A: jax.Array,     # [nh]
+    Bm: jax.Array,    # [B,G,N]
+    Cm: jax.Array,    # [B,G,N]
+    h: jax.Array,     # [B,nh,P,N]
+):
+    nh, G = x.shape[1], Bm.shape[1]
+    rep = nh // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    da = jnp.exp(dt.astype(jnp.float32) * A[None, :])             # [B,nh]
+    upd = jnp.einsum("bhn,bhp,bh->bhpn", Bh, x.astype(jnp.float32), dt.astype(jnp.float32))
+    h_new = da[:, :, None, None] * h + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h_new)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 block
+# ---------------------------------------------------------------------------
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array          # [B, nh, P, N] f32
+    conv_x: jax.Array     # [B, W-1, d_inner]
+    conv_B: jax.Array     # [B, W-1, G·N]
+    conv_C: jax.Array     # [B, W-1, G·N]
+
+
+def ssm_cache_init(plan: SSMPlan, batch: int, dtype) -> SSMCache:
+    W = plan.conv_width
+    gn = plan.groups * plan.state
+    return SSMCache(
+        h=jnp.zeros((batch, plan.heads_padded, plan.head_dim, plan.state), jnp.float32),
+        conv_x=jnp.zeros((batch, W - 1, plan.d_inner), dtype),
+        conv_B=jnp.zeros((batch, W - 1, gn), dtype),
+        conv_C=jnp.zeros((batch, W - 1, gn), dtype),
+    )
+
+
+def ssm_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # [B,S,D]
+    plan: SSMPlan,
+    chunk: int = 128,
+    cache: Optional[SSMCache] = None,   # decode (S==1) or continuation
+    norm_eps: float = 1e-5,
+    constrain=None,   # sharding constraint for [B,S,d_inner] tensors
+):
+    """Returns (y [B,S,D], new_cache)."""
+    B, S, D = x.shape
+    nh, P, N, G = plan.heads_padded, plan.head_dim, plan.state, plan.groups
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    xs = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    if constrain is not None:
+        z, xs = constrain(z), constrain(xs)
+    Bs = jnp.einsum("bsd,dg->bsg", x, p["w_B"])
+    Cs = jnp.einsum("bsd,dg->bsg", x, p["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    cx = cache.conv_x if cache is not None else None
+    cB = cache.conv_B if cache is not None else None
+    cC = cache.conv_C if cache is not None else None
+    xs, ncx = causal_conv(xs, p["conv_x"], cx)
+    Bs, ncB = causal_conv(Bs, p["conv_B"], cB)
+    Cs, ncC = causal_conv(Cs, p["conv_C"], cC)
+
+    xh = xs.reshape(B, S, nh, P)
+    Bm = Bs.reshape(B, S, G, N)
+    Cm = Cs.reshape(B, S, G, N)
+
+    if S == 1 and cache is not None:
+        y, h_new = ssd_decode_step(xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], cache.h)
+        y = y[:, None]
+    else:
+        h0 = cache.h if cache is not None else None
+        y, h_new = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+
+    y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, nh * P)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    new_cache = SSMCache(h=h_new, conv_x=ncx, conv_B=ncB, conv_C=ncC)
+    return out, new_cache

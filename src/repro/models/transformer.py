@@ -1,0 +1,341 @@
+"""Decoder backbone assembly: scan-over-layers, remat, heterogeneous blocks.
+
+One scan step covers ``moe_layer_period`` consecutive layers (llama4
+alternates dense/MoE), so parameter stacks have leading dim
+``L / period`` and compile time is O(1) in depth.  Block families:
+
+  dense/audio/vlm : [norm → attn → +res] [norm → mlp → +res]
+  moe             : same, MLP replaced by MoE (+ optional shared expert)
+  ssm             : [norm → mamba2 → +res]
+  hybrid (hymba)  : [norm → attn ∥ mamba2 → mean → +res] [norm → mlp → +res]
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _ckpt_name
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import AttentionPlan, plan_attention
+from repro.models.moe import MoEPlan, plan_moe
+from repro.models.ssm import SSMPlan, plan_ssm
+
+
+@dataclass(frozen=True)
+class ModelPlan:
+    cfg: ModelConfig
+    tp: int
+    attn: Optional[AttentionPlan]
+    moe: Optional[MoEPlan]
+    ssm: Optional[SSMPlan]
+    vocab_padded: int
+
+    @property
+    def period(self) -> int:
+        return self.cfg.moe_layer_period if self.cfg.is_moe else 1
+
+    @property
+    def scan_steps(self) -> int:
+        return self.cfg.num_layers // self.period
+
+
+def make_plan(cfg: ModelConfig, tp: int = 1, capacity_factor: float = 1.0) -> ModelPlan:
+    attn = (
+        plan_attention(cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, tp)
+        if cfg.has_attention
+        else None
+    )
+    moe = plan_moe(cfg, tp, capacity_factor) if cfg.is_moe else None
+    ssm = plan_ssm(cfg, tp) if cfg.has_ssm else None
+    vocab_padded = L.ceil_to(cfg.vocab_size, max(256, tp))
+    return ModelPlan(cfg=cfg, tp=tp, attn=attn, moe=moe, ssm=ssm, vocab_padded=vocab_padded)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer (sub-block) params
+# ---------------------------------------------------------------------------
+
+
+def _sublayer_init(key, plan: ModelPlan, is_moe_layer: bool, dtype) -> Dict[str, Any]:
+    cfg = plan.cfg
+    keys = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": L.rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.has_attention:
+        p["attn"] = attn_mod.attn_init(keys[0], cfg.d_model, plan.attn, cfg.qkv_bias, dtype)
+    if cfg.has_ssm:
+        p["ssm"] = ssm_mod.ssm_init(keys[1], plan.ssm, dtype)
+    if cfg.d_ff > 0:
+        p["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+        if is_moe_layer:
+            p["moe"] = moe_mod.moe_init(keys[2], plan.moe, cfg.gated_mlp, dtype)
+            if cfg.shared_expert:
+                p["shared"] = L.mlp_init(keys[3], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+        else:
+            p["mlp"] = L.mlp_init(keys[4], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+    return p
+
+
+def init_params(key, plan: ModelPlan) -> Dict[str, Any]:
+    cfg = plan.cfg
+    dtype = L.dtype_of(cfg.dtype)
+    k_emb, k_head, k_layers, k_fn = jax.random.split(key, 4)
+    params: Dict[str, Any] = {"final_norm": L.rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.frontend is None:
+        params["embed"] = L.embed_init(k_emb, plan.vocab_padded, cfg.d_model, dtype)
+    else:
+        # modality-frontend stub: precomputed frame/patch embeddings enter
+        # through a learned adapter projection
+        params["frontend_proj"] = (
+            jax.random.normal(k_emb, (cfg.frontend_dim, cfg.d_model))
+            / (cfg.frontend_dim ** 0.5)
+        ).astype(dtype)
+    if not cfg.tie_embeddings or cfg.frontend is not None:
+        params["lm_head"] = L.embed_init(k_head, plan.vocab_padded, cfg.d_model, dtype)
+
+    mask = cfg.moe_layer_mask()
+    period, steps = plan.period, plan.scan_steps
+
+    def unit_init(k):
+        ks = jax.random.split(k, period)
+        return tuple(
+            _sublayer_init(ks[j], plan, mask[j], dtype) for j in range(period)
+        )
+
+    unit_keys = jax.random.split(k_layers, steps)
+    stacked = jax.vmap(unit_init)(unit_keys)  # leaves get leading [steps]
+    params["layers"] = stacked
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Sub-block application
+# ---------------------------------------------------------------------------
+
+
+class LayerCtx(NamedTuple):
+    """Static context threaded through the scan body."""
+    plan: ModelPlan
+    mode: str                     # "train" | "prefill" | "decode"
+    window: int
+    use_kernel: bool
+    mesh: Any                     # None on single device
+    dp_axes: Tuple[str, ...]
+    block_kv: int = 1024
+    ssd_chunk: int = 128
+    ring: bool = False            # ring KV cache (long-context decode)
+    # sharding constraints (identity when mesh is None):
+    #   c_act  — activations [B, S, D]           → P(dp, None, None)
+    #   c_head — per-head tensors [B,S,N,(P),H]  → P(dp, None, "model", …)
+    #   c_ffn  — hidden [B, S, F] / [B, S, di]   → P(dp, None, "model")
+    c_act: Any = None
+    c_head: Any = None
+    c_ffn: Any = None
+    attn_impl: str = "blocked"   # "blocked" | "pairs" (causal block skip)
+    tp_reduce: Any = None        # explicit bf16 TP reduction (tp_reduce.py)
+    remat: str = "block"         # "block" | "save_mixer"
+
+
+def _attn_sublayer(p, x, ctx: LayerCtx, positions, cache, cache_len):
+    cfg = ctx.plan.cfg
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    kv_cache = None
+    if ctx.mode == "decode":
+        kv_cache = (cache["k"], cache["v"])
+    y, (k_new, v_new) = attn_mod.attn_apply(
+        p["attn"], h, ctx.plan.attn, cfg.rope_theta, positions,
+        causal=True, window=ctx.window, block_kv=ctx.block_kv,
+        use_kernel=ctx.use_kernel, cache=kv_cache, cache_len=cache_len,
+        ring=ctx.ring, constrain=ctx.c_head, impl=ctx.attn_impl,
+        tp_reduce=ctx.tp_reduce,
+    )
+    new_cache = None
+    if ctx.mode == "decode":
+        # attn_apply already wrote the new token into the cache
+        new_cache = {"k": k_new, "v": v_new}
+    elif ctx.mode == "prefill":
+        new_cache = {"k": k_new, "v": v_new}
+    return y, new_cache
+
+
+def _ssm_sublayer(p, x, ctx: LayerCtx, cache):
+    y, new_cache = ssm_mod.ssm_apply(
+        p["ssm"], x, ctx.plan.ssm, chunk=ctx.ssd_chunk,
+        cache=cache, norm_eps=ctx.plan.cfg.norm_eps, constrain=ctx.c_ffn,
+    )
+    if ctx.mode == "train":
+        new_cache = None
+    return y, new_cache
+
+
+def _mixer_sublayer(p, x, ctx: LayerCtx, positions, cache, cache_len):
+    """Attention / SSM / hybrid mixer with residual."""
+    cfg = ctx.plan.cfg
+    new_cache: Dict[str, Any] = {}
+    if cfg.hybrid:
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        ya, kv = _attn_sublayer({"ln1": p["ln1"], "attn": p["attn"]}, x, ctx,
+                                positions, cache.get("kv") if cache else None, cache_len)
+        ys, sc = _ssm_sublayer(p, h, ctx, cache.get("ssm") if cache else None)
+        y = 0.5 * (ya + ys)
+        if kv is not None:
+            new_cache["kv"] = kv
+        if sc is not None:
+            new_cache["ssm"] = sc
+    elif cfg.has_attention:
+        y, kv = _attn_sublayer(p, x, ctx, positions,
+                               cache.get("kv") if cache else None, cache_len)
+        if kv is not None:
+            new_cache["kv"] = kv
+    else:
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, sc = _ssm_sublayer(p, h, ctx, cache.get("ssm") if cache else None)
+        if sc is not None:
+            new_cache["ssm"] = sc
+    out = x + y
+    out = _ckpt_name(out, "mixer_out")
+    return out, (new_cache or None)
+
+
+def _ffn_sublayer(p, x, ctx: LayerCtx):
+    """MLP / MoE with residual; returns (x, aux_loss)."""
+    cfg = ctx.plan.cfg
+    if cfg.d_ff == 0:
+        return x, jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        if ctx.mesh is not None:
+            y, aux = moe_mod.moe_apply(
+                h, p["moe"], ctx.plan.moe, cfg.gated_mlp, ctx.mesh,
+                dp_axes=ctx.dp_axes,
+            )
+        else:
+            y, aux = moe_local_reference(h, p["moe"], ctx.plan.moe, cfg.gated_mlp)
+        if "shared" in p:
+            y = y + L.mlp_apply(p["shared"], h, cfg.gated_mlp, constrain=ctx.c_ffn,
+                                tp_reduce=ctx.tp_reduce)
+    else:
+        y = L.mlp_apply(p["mlp"], h, cfg.gated_mlp, constrain=ctx.c_ffn,
+                        tp_reduce=ctx.tp_reduce)
+    return x + y, aux
+
+
+def moe_local_reference(x, weights, plan: MoEPlan, gated: bool):
+    """Dense one-hot MoE (oracle / single-device smoke path)."""
+    B, S, D = x.shape
+    t = x.reshape(-1, D)
+    logits = jnp.einsum("td,de->te", t.astype(jnp.float32), weights["router"])
+    probs = jax.nn.softmax(logits, -1)
+    topv, topi = jax.lax.top_k(probs, plan.top_k)
+    Ev, r = plan.virtual_experts, plan.virt_per_expert
+    h1 = jnp.einsum("td,edf->tef", t, weights["w1"])
+    if gated:
+        h = jax.nn.silu(h1) * jnp.einsum("td,edf->tef", t, weights["w3"])
+    else:
+        h = jax.nn.gelu(h1)
+    out_e = jnp.einsum("tef,efd->ted", h, weights["w2"])  # [t, Ev, D]
+    # combine: each selected logical expert e contributes its r virtual slices
+    slots = (topi[:, :, None] * r + jnp.arange(r)[None, None, :]).reshape(t.shape[0], -1)
+    w = jnp.repeat(topv, r, axis=-1)
+    sel = jnp.take_along_axis(out_e, slots[:, :, None], axis=1)  # [t, kr, D]
+    y = jnp.einsum("tkd,tk->td", sel.astype(jnp.float32), w)
+    aux = _local_aux(probs, topi, plan)
+    return y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def _local_aux(probs, topi, plan: MoEPlan):
+    E = plan.num_experts
+    f = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    return E * jnp.sum(f * jnp.mean(probs, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: Dict[str, Any],
+    inputs: jax.Array,            # tokens [B,S] int32 or embeds [B,S,D]
+    plan: ModelPlan,
+    ctx: LayerCtx,
+    cache: Any = None,            # stacked [steps, ...] pytree or None
+    cache_len: Optional[jax.Array] = None,
+):
+    """Returns (logits, new_cache, aux_losses)."""
+    cfg = plan.cfg
+    if cfg.frontend is None:
+        x = L.embed_lookup(params["embed"], inputs)
+    else:
+        x = jnp.einsum(
+            "bsf,fd->bsd", inputs.astype(L.dtype_of(cfg.dtype)), params["frontend_proj"]
+        )
+    B, S = x.shape[:2]
+    if ctx.mode == "decode":
+        positions = cache_len + jnp.arange(S)
+    else:
+        positions = jnp.arange(S)
+
+    period = plan.period
+
+    def unit_apply(x, unit_params, unit_cache):
+        new_caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for j in range(period):
+            p = unit_params[j]
+            c = unit_cache[j] if unit_cache is not None else None
+            x, nc = _mixer_sublayer(p, x, ctx, positions, c, cache_len)
+            x, aux = _ffn_sublayer(p, x, ctx)
+            aux_total = aux_total + aux
+            new_caches.append(nc)
+        return x, tuple(new_caches), aux_total
+
+    if ctx.mode == "train":
+        if ctx.remat == "save_mixer":
+            # keep the post-mixer residual: the bwd replay skips the mixer
+            # (and its TP all-reduce) entirely — §Perf iteration
+            unit_fn = jax.checkpoint(
+                unit_apply,
+                policy=jax.checkpoint_policies.save_only_these_names("mixer_out"),
+            )
+        else:
+            unit_fn = jax.checkpoint(unit_apply)
+    else:
+        unit_fn = unit_apply
+
+    def scan_body(x, xs):
+        unit_params, unit_cache = xs
+        if ctx.c_act is not None:
+            x = ctx.c_act(x)
+        x, new_cache, aux = unit_fn(x, unit_params, unit_cache)
+        return x, (new_cache, aux)
+
+    if ctx.c_act is not None:
+        x = ctx.c_act(x)
+    cache_xs = cache if cache is not None else _none_cache(plan)
+    x, (new_cache, auxs) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache_xs)
+    )
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if ctx.c_act is not None:
+        x = ctx.c_act(x)
+    head = params.get("lm_head", params.get("embed"))
+    return x, head, new_cache, jnp.sum(auxs)
+
+
+def _none_cache(plan: ModelPlan):
+    """Scan xs placeholder when no cache is threaded (None per unit layer)."""
+    return tuple(None for _ in range(plan.period))
+
+
+def logits_for(x: jax.Array, head: jax.Array) -> jax.Array:
+    return L.lm_head(x, head)

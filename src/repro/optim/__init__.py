@@ -1,0 +1,9 @@
+"""Optimizers and distributed-optimization tricks."""
+from repro.optim.adamw import (  # noqa: F401
+    AdamState,
+    AdamW,
+    apply_updates,
+    constant_schedule,
+    cosine_schedule,
+    global_norm,
+)

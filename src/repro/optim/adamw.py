@@ -1,0 +1,93 @@
+"""AdamW + schedules — optax-style minimal implementation (no deps).
+
+Moment dtype is configurable: the 400 B-class configs use bf16 moments so
+param+optimizer state fits a single v5e pod (documented in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Optional[str] = None   # None => param dtype; "bfloat16"/"float32"
+
+    def _mdtype(self, p):
+        return jnp.dtype(self.moment_dtype) if self.moment_dtype else p.dtype
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, self._mdtype(p))
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamState, params) -> Tuple[Any, AdamState]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+        lr = self.learning_rate(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * g
+            v_new = b2 * v32 + (1 - b2) * g * g
+            mhat, vhat = m_new / bc1, v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return {"u": (-lr * delta).astype(p.dtype),
+                    "m": m_new.astype(m.dtype), "v": v_new.astype(v.dtype)}
+
+        is_rec = lambda x: isinstance(x, dict) and set(x) == {"u", "m", "v"}
+        treedef = jax.tree.structure(grads)
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        flat = jax.tree.leaves(out, is_leaf=is_rec)
+        updates = jax.tree.unflatten(treedef, [t["u"] for t in flat])
+        m = jax.tree.unflatten(treedef, [t["m"] for t in flat])
+        v = jax.tree.unflatten(treedef, [t["v"] for t in flat])
+        return updates, AdamState(step=step, m=m, v=v), gnorm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def constant_schedule(value: float):
+    return lambda step: jnp.full((), value, jnp.float32)

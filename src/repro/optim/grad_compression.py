@@ -1,0 +1,75 @@
+"""Error-feedback int8 gradient compression for cross-pod data parallelism.
+
+At 2+ pods the inter-pod links are the scarcest resource (DESIGN §5); the
+pod-axis gradient reduction is compressed ~4–8× by replacing the f32
+all-reduce (wire = 2·(g−1)/g · 4B/elem) with an **all-gather of int8
+payloads + per-row scales** followed by a local dequantized sum
+(wire = (g−1)/g · 1B/elem) — exact for heterogeneous scales, no second
+reduction round.  Error feedback carries the quantization residual into the
+next step, keeping Adam convergence unbiased in practice
+(Karimireddy et al., 2019).
+
+``compressed_psum`` is the drop-in used inside shard_map for the pod axis;
+intra-pod reductions stay full precision.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization; returns (q [r, c] i8, scale [r, 1])."""
+    flat = x.reshape(x.shape[0] if x.ndim > 1 else 1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def ef_compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback compression of one gradient leaf.
+
+    Returns (q, scale, new_err) with g + err == deq(q, scale) + new_err."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    deq = dequantize_int8(q, scale, g.shape)
+    new_err = corrected - deq
+    return q, scale, new_err
+
+
+def ef_init(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(
+    g: jax.Array, err: jax.Array, axis_name: str = "pod"
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean over ``axis_name`` with int8 wire traffic (inside shard_map).
+
+    all-gathers the int8 payload + scales and sums locally — exact for
+    per-participant scales; returns (mean gradient, new error state)."""
+    q, scale, new_err = ef_compress(g, err)
+    q_all = jax.lax.all_gather(q, axis_name)          # [g, r, c] int8 wire
+    s_all = jax.lax.all_gather(scale, axis_name)      # [g, r, 1] f32 (tiny)
+    total = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+    n = q_all.shape[0]
+    return (total / n).reshape(g.shape), new_err
+
+
+def compressed_tree_psum(grads: Any, err_state: Any, axis_name: str = "pod"):
+    """Tree-mapped ``compressed_psum``; returns (mean grads, new err state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        r, ne = compressed_psum(g, e, axis_name)
+        out.append(r.astype(g.dtype))
+        errs.append(ne)
+    return jax.tree.unflatten(treedef, out), jax.tree.unflatten(treedef, errs)

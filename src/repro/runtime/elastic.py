@@ -1,0 +1,55 @@
+"""Elastic re-meshing: rebuild a mesh after membership changes and reshard
+a (topology-free) checkpoint onto it.
+
+The checkpoint stores host arrays (checkpoint/checkpointer.py); resharding
+is a ``device_put`` with the new mesh's shardings, so scale-up/down only
+requires that the new mesh's model axis still divides the sharded dims —
+validated here before any data movement.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def remesh(n_devices: int, model_axis: int, devices=None) -> Mesh:
+    """Largest (data, model) mesh that fits n_devices."""
+    data = max(n_devices // model_axis, 1)
+    model = model_axis if n_devices >= model_axis else n_devices
+    devs = (devices or jax.devices())[: data * model]
+    arr = np.asarray(devs).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def validate_specs(tree_struct: Any, specs: Any, mesh: Mesh) -> bool:
+    """Check every sharded dim divides on the new mesh."""
+    ok = True
+
+    def chk(s, spec):
+        nonlocal ok
+        if not isinstance(spec, P):
+            return
+        for dim, names in zip(s.shape, tuple(spec) + (None,) * (len(s.shape) - len(spec))):
+            if names is None:
+                continue
+            names_t = names if isinstance(names, tuple) else (names,)
+            size = int(np.prod([mesh.shape[n] for n in names_t]))
+            if dim % size:
+                ok = False
+
+    jax.tree.map(chk, tree_struct, specs,
+                 is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+    return ok
+
+
+def reshard(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    """Place host (or differently-sharded) arrays onto ``mesh``."""
+    return jax.tree.map(
+        lambda x, spec: jax.device_put(np.asarray(jax.device_get(x)),
+                                       NamedSharding(mesh, spec)),
+        tree, specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

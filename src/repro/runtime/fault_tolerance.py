@@ -1,0 +1,109 @@
+"""Fault tolerance & straggler mitigation — the paper's insight applied to
+the training runtime.
+
+The PFAIT principle (decisions from *stale, non-blocking* global knowledge,
+made safe by a calibrated margin) shapes three runtime policies:
+
+* ``HeartbeatMonitor`` — workers are declared failed from *stale* heartbeat
+  views (no global barrier to agree on liveness); the margin is the timeout.
+* ``StragglerPolicy``  — per-step durations feed a rolling quantile; a
+  worker is a straggler when it exceeds ``factor × p50`` for ``persistence``
+  consecutive windows (the NFAIS-style persistence check avoids flapping).
+* ``RestartPlan``      — deterministic restart recipe: restore from the
+  last committed checkpoint, rebuild the mesh from surviving workers
+  (elastic.py), resume the data stream at the checkpoint step (the pipeline
+  is keyed by step, so no replay bookkeeping is needed).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class HeartbeatMonitor:
+    """Stale-view failure detector (virtual-time friendly for tests)."""
+
+    timeout: float = 30.0
+    _last: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, worker: int, t: float) -> None:
+        self._last[worker] = t
+
+    def failed(self, t: float) -> List[int]:
+        return [w for w, lt in self._last.items() if t - lt > self.timeout]
+
+    def alive(self, t: float) -> List[int]:
+        return [w for w, lt in self._last.items() if t - lt <= self.timeout]
+
+
+@dataclass
+class StragglerPolicy:
+    """Persistence-filtered relative-slowness detector."""
+
+    factor: float = 2.0
+    persistence: int = 3
+    window: int = 32
+    _hist: Dict[int, List[float]] = field(default_factory=dict)
+    _count: Dict[int, int] = field(default_factory=dict)
+
+    def record(self, worker: int, duration: float) -> None:
+        h = self._hist.setdefault(worker, [])
+        h.append(duration)
+        if len(h) > self.window:
+            h.pop(0)
+
+    def check(self) -> List[int]:
+        """Returns workers flagged as persistent stragglers."""
+        if not self._hist:
+            return []
+        medians = {w: float(np.median(h)) for w, h in self._hist.items() if h}
+        global_p50 = float(np.median(list(medians.values())))
+        out = []
+        for w, m in medians.items():
+            if m > self.factor * global_p50:
+                self._count[w] = self._count.get(w, 0) + 1
+            else:
+                self._count[w] = 0
+            if self._count.get(w, 0) >= self.persistence:
+                out.append(w)
+        return out
+
+
+@dataclass(frozen=True)
+class RestartPlan:
+    checkpoint_step: int
+    surviving_workers: Tuple[int, ...]
+    new_mesh_shape: Tuple[int, ...]
+    data_resume_step: int
+
+    @property
+    def world_size(self) -> int:
+        return int(np.prod(self.new_mesh_shape))
+
+
+def plan_restart(
+    checkpoint_step: Optional[int],
+    workers: Sequence[int],
+    failed: Sequence[int],
+    model_axis: int = 16,
+) -> RestartPlan:
+    """Shrink-to-fit elastic restart: drop failed workers, re-factor the
+    data axis, resume data at the checkpoint step."""
+    survivors = tuple(sorted(set(workers) - set(failed)))
+    n = len(survivors)
+    if n == 0:
+        raise RuntimeError("no survivors to restart with")
+    # model axis is fixed by the parallelism plan; data axis shrinks
+    data = max(n // model_axis, 1)
+    usable = data * model_axis if n >= model_axis else n
+    step = checkpoint_step or 0
+    return RestartPlan(
+        checkpoint_step=step,
+        surviving_workers=survivors[:usable],
+        new_mesh_shape=(data, model_axis) if n >= model_axis else (1, n),
+        data_resume_step=step,
+    )

@@ -1,0 +1,8 @@
+"""Fixed-point solver substrate (the paper's experimental setting)."""
+from repro.solvers.convdiff import ConvDiffProblem, Stencil, make_rhs  # noqa: F401
+from repro.solvers.fixed_point import (  # noqa: F401
+    SolveResult,
+    SolverConfig,
+    make_sharded_solver,
+    solve_single,
+)

@@ -1,0 +1,220 @@
+"""3-D convection–diffusion problem (paper §4.1).
+
+    ∂u/∂t − ν Δu + a·∇u = s   on [0,1]³, homogeneous Dirichlet BC.
+
+Backward-Euler + centred finite differences give, per time step, a sparse
+linear system ``A x = b`` with the 7-point stencil
+
+    diag       : 1/dt + 6ν/h²
+    x∓ /y∓ /z∓ : −ν/h² ∓ a_d/(2h)      (d = x, y, z)
+
+solved by relaxation: Jacobi at subdomain interfaces (ghost planes frozen to
+the last received neighbour data) and red-black Gauss–Seidel at interior
+nodes — exactly the paper's scheme.  The Jacobi iteration matrix has
+spectral radius ρ ≈ (6ν/h²)/(1/dt + 6ν/h²) < 1, so ``dt`` directly
+controls the contraction rate; ``for_contraction`` picks dt for a target ρ.
+
+``ConvDiffProblem`` implements ``core.async_engine.DecomposedProblem`` for
+the event-level simulator (numpy).  The pure stencil helpers are shared with
+the JAX distributed solver (solvers/fixed_point.py) and the Pallas kernel
+oracle (kernels/jacobi3d/ref.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.solvers.partition import GridPartition, process_grid
+
+
+@dataclass(frozen=True)
+class Stencil:
+    """7-point convection–diffusion stencil coefficients."""
+
+    diag: float
+    xm: float
+    xp: float
+    ym: float
+    yp: float
+    zm: float
+    zp: float
+
+    @staticmethod
+    def convdiff(n: int, nu: float, a: Tuple[float, float, float], dt: float) -> "Stencil":
+        h = 1.0 / (n + 1)
+        d = nu / h**2
+        cx, cy, cz = (ai / (2 * h) for ai in a)
+        return Stencil(
+            diag=1.0 / dt + 6.0 * d,
+            xm=-d - cx, xp=-d + cx,
+            ym=-d - cy, yp=-d + cy,
+            zm=-d - cz, zp=-d + cz,
+        )
+
+    @staticmethod
+    def for_contraction(n: int, nu: float, a: Tuple[float, float, float], rho: float) -> "Stencil":
+        """Pick dt so the Jacobi spectral-radius proxy 6ν/h² / diag = rho."""
+        h = 1.0 / (n + 1)
+        d = nu / h**2
+        inv_dt = 6.0 * d * (1.0 - rho) / rho
+        return Stencil.convdiff(n, nu, a, dt=1.0 / inv_dt)
+
+    def offdiag_apply(self, g: np.ndarray) -> np.ndarray:
+        """Σ_offdiag a_ij x_j over a ghosted block g[(bx+2, by+2, bz+2)]."""
+        return (
+            self.xm * g[:-2, 1:-1, 1:-1]
+            + self.xp * g[2:, 1:-1, 1:-1]
+            + self.ym * g[1:-1, :-2, 1:-1]
+            + self.yp * g[1:-1, 2:, 1:-1]
+            + self.zm * g[1:-1, 1:-1, :-2]
+            + self.zp * g[1:-1, 1:-1, 2:]
+        )
+
+    def residual_block(self, g: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """b − A x over a ghosted block (rows owned by the block)."""
+        return b - (self.diag * g[1:-1, 1:-1, 1:-1] + self.offdiag_apply(g))
+
+    def jacobi_sweep(self, g: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """One Jacobi sweep: returns the new interior block (no ghosts)."""
+        return (b - self.offdiag_apply(g)) / self.diag
+
+    def redblack_gs_sweep(self, g: np.ndarray, b: np.ndarray, ox: int, oy: int) -> np.ndarray:
+        """One red-black Gauss–Seidel sweep (ghost planes frozen — the
+        interface stays Jacobi w.r.t. neighbour data).  ``ox, oy`` are the
+        block's global offsets so the checkerboard is globally aligned."""
+        bx, by, bz = b.shape
+        ix = np.arange(bx)[:, None, None] + ox
+        iy = np.arange(by)[None, :, None] + oy
+        iz = np.arange(bz)[None, None, :]
+        parity = (ix + iy + iz) % 2
+        for color in (0, 1):
+            new = (b - self.offdiag_apply(g)) / self.diag
+            mask = parity == color
+            inner = g[1:-1, 1:-1, 1:-1]
+            g[1:-1, 1:-1, 1:-1] = np.where(mask, new, inner)
+        return g[1:-1, 1:-1, 1:-1]
+
+
+def make_rhs(n: int, seed: int = 0, kind: str = "smooth") -> np.ndarray:
+    """Right-hand side b = u_prev/dt + s on the n³ interior grid."""
+    if kind == "const":
+        return np.ones((n, n, n))
+    rng = np.random.default_rng(seed)
+    xs = np.linspace(0, 1, n + 2)[1:-1]
+    X, Y, Z = np.meshgrid(xs, xs, xs, indexing="ij")
+    b = (
+        np.sin(np.pi * X) * np.sin(np.pi * Y) * np.sin(np.pi * Z)
+        + 0.3 * np.sin(2 * np.pi * X) * np.cos(np.pi * Z)
+    )
+    return b + 0.05 * rng.standard_normal((n, n, n))
+
+
+class ConvDiffProblem:
+    """Paper experiment as a ``DecomposedProblem`` for the event simulator."""
+
+    def __init__(
+        self,
+        n: int = 24,
+        p: int = 4,
+        nu: float = 1.0,
+        a: Tuple[float, float, float] = (1.0, 1.0, 1.0),
+        rho: float = 0.95,
+        ord: float = float("inf"),
+        seed: int = 0,
+        sweep: str = "hybrid",  # "hybrid" (paper: GS interior) | "jacobi"
+    ):
+        px, py = process_grid(p)
+        self.part = GridPartition(n=n, px=px, py=py)
+        self.p = self.part.p
+        self.n = n
+        self.ord = ord
+        self.sweep = sweep
+        self.st = Stencil.for_contraction(n, nu, a, rho)
+        self.b_global = make_rhs(n, seed)
+        bx, by, bz = self.part.block
+        self._b: List[np.ndarray] = []
+        for i in range(self.p):
+            ox, oy = self.part.offsets(i)
+            self._b.append(self.b_global[ox : ox + bx, oy : oy + by, :])
+
+    # -- DecomposedProblem interface ----------------------------------------
+    def neighbors(self, i: int) -> List[int]:
+        return self.part.neighbors(i)
+
+    def init_local(self, i: int) -> np.ndarray:
+        bx, by, bz = self.part.block
+        return np.zeros((bx, by, bz))
+
+    def _ghosted(self, i: int, x_i: np.ndarray, deps: Dict[int, np.ndarray]) -> np.ndarray:
+        bx, by, bz = self.part.block
+        g = np.zeros((bx + 2, by + 2, bz + 2))
+        g[1:-1, 1:-1, 1:-1] = x_i
+        for j in self.part.neighbors(i):
+            side = self.part.side(i, j)
+            dep = deps.get(j)
+            if dep is None:
+                continue
+            if side == "x-":
+                g[0, 1:-1, 1:-1] = dep
+            elif side == "x+":
+                g[-1, 1:-1, 1:-1] = dep
+            elif side == "y-":
+                g[1:-1, 0, 1:-1] = dep
+            else:
+                g[1:-1, -1, 1:-1] = dep
+        return g
+
+    def update(self, i: int, x_i: np.ndarray, deps: Dict[int, np.ndarray]) -> np.ndarray:
+        g = self._ghosted(i, x_i, deps)
+        if self.sweep == "jacobi":
+            return self.st.jacobi_sweep(g, self._b[i])
+        ox, oy = self.part.offsets(i)
+        return self.st.redblack_gs_sweep(g, self._b[i], ox, oy)
+
+    def interface(self, i: int, x_i: np.ndarray, j: int) -> np.ndarray:
+        side = self.part.side(i, j)  # face of i facing j
+        if side == "x-":
+            return np.array(x_i[0, :, :], copy=True)
+        if side == "x+":
+            return np.array(x_i[-1, :, :], copy=True)
+        if side == "y-":
+            return np.array(x_i[:, 0, :], copy=True)
+        return np.array(x_i[:, -1, :], copy=True)
+
+    def local_residual(self, i: int, x_i: np.ndarray, deps: Dict[int, np.ndarray]) -> float:
+        g = self._ghosted(i, x_i, deps)
+        r = self.st.residual_block(g, self._b[i])
+        if np.isinf(self.ord):
+            return float(np.max(np.abs(r)))
+        return float(np.sum(r * r))
+
+    def exact_residual(self, xs: Sequence[np.ndarray]) -> float:
+        u = self.assemble(xs)
+        g = np.zeros((self.n + 2,) * 3)
+        g[1:-1, 1:-1, 1:-1] = u
+        r = self.st.residual_block(g, self.b_global)
+        if np.isinf(self.ord):
+            return float(np.max(np.abs(r)))
+        return float(np.sqrt(np.sum(r * r)))
+
+    # -- helpers -------------------------------------------------------------
+    def assemble(self, xs: Sequence[np.ndarray]) -> np.ndarray:
+        bx, by, _ = self.part.block
+        u = np.zeros((self.n, self.n, self.n))
+        for i in range(self.p):
+            ox, oy = self.part.offsets(i)
+            u[ox : ox + bx, oy : oy + by, :] = xs[i]
+        return u
+
+    def solve_reference(self, tol: float = 1e-12, max_iter: int = 100_000) -> np.ndarray:
+        """Sequential Jacobi to high precision (test oracle)."""
+        g = np.zeros((self.n + 2,) * 3)
+        for _ in range(max_iter):
+            new = self.st.jacobi_sweep(g, self.b_global)
+            delta = np.max(np.abs(new - g[1:-1, 1:-1, 1:-1]))
+            g[1:-1, 1:-1, 1:-1] = new
+            if delta < tol:
+                break
+        return g[1:-1, 1:-1, 1:-1]

@@ -1,0 +1,32 @@
+"""Jacobi relaxation sweeps — pure-jnp (shared by the distributed solver and
+as oracle for the Pallas jacobi3d kernel)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.solvers.convdiff import Stencil
+
+
+def offdiag_apply(st: Stencil, g: jnp.ndarray) -> jnp.ndarray:
+    """Σ_offdiag a_ij x_j over a ghosted block g[(bx+2, by+2, bz+2)]."""
+    return (
+        st.xm * g[:-2, 1:-1, 1:-1]
+        + st.xp * g[2:, 1:-1, 1:-1]
+        + st.ym * g[1:-1, :-2, 1:-1]
+        + st.yp * g[1:-1, 2:, 1:-1]
+        + st.zm * g[1:-1, 1:-1, :-2]
+        + st.zp * g[1:-1, 1:-1, 2:]
+    )
+
+
+def jacobi_sweep(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, omega: float = 1.0) -> jnp.ndarray:
+    """One (weighted) Jacobi sweep; returns the new interior block."""
+    new = (b - offdiag_apply(st, g)) / st.diag
+    if omega == 1.0:
+        return new
+    return (1.0 - omega) * g[1:-1, 1:-1, 1:-1] + omega * new
+
+
+def residual_block(st: Stencil, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """b − A x over the rows owned by the ghosted block."""
+    return b - (st.diag * g[1:-1, 1:-1, 1:-1] + offdiag_apply(st, g))

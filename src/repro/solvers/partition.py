@@ -1,0 +1,78 @@
+"""Domain decomposition for the paper's convection–diffusion experiment.
+
+The cubic domain is partitioned into a ``px × py`` grid in the (x, y)-plane;
+each subdomain keeps the whole z-interval (paper §4.1).  Workers are numbered
+row-major; neighbours are the 4-neighbourhood in the (x, y) process grid.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+
+def process_grid(p: int) -> Tuple[int, int]:
+    """Factor p into the most-square (px, py) grid (paper uses 2-D grids)."""
+    best = (p, 1)
+    for px in range(1, int(math.isqrt(p)) + 1):
+        if p % px == 0:
+            best = (p // px, px)
+    return best
+
+
+@dataclass(frozen=True)
+class GridPartition:
+    """Partition of an ``n × n × n`` interior grid over a ``px × py`` grid."""
+
+    n: int
+    px: int
+    py: int
+
+    def __post_init__(self):
+        if self.n % self.px or self.n % self.py:
+            raise ValueError(f"n={self.n} not divisible by ({self.px},{self.py})")
+
+    @property
+    def p(self) -> int:
+        return self.px * self.py
+
+    @property
+    def block(self) -> Tuple[int, int, int]:
+        return (self.n // self.px, self.n // self.py, self.n)
+
+    def coords(self, i: int) -> Tuple[int, int]:
+        return divmod(i, self.py)
+
+    def rank(self, cx: int, cy: int) -> int:
+        return cx * self.py + cy
+
+    def neighbors(self, i: int) -> List[int]:
+        cx, cy = self.coords(i)
+        out = []
+        if cx > 0:
+            out.append(self.rank(cx - 1, cy))
+        if cx < self.px - 1:
+            out.append(self.rank(cx + 1, cy))
+        if cy > 0:
+            out.append(self.rank(cx, cy - 1))
+        if cy < self.py - 1:
+            out.append(self.rank(cx, cy + 1))
+        return out
+
+    def side(self, i: int, j: int) -> str:
+        """Which face of subdomain i touches neighbour j: x-|x+|y-|y+."""
+        (cx, cy), (dx, dy) = self.coords(i), self.coords(j)
+        if dx == cx - 1 and dy == cy:
+            return "x-"
+        if dx == cx + 1 and dy == cy:
+            return "x+"
+        if dx == cx and dy == cy - 1:
+            return "y-"
+        if dx == cx and dy == cy + 1:
+            return "y+"
+        raise ValueError(f"{j} is not a neighbour of {i}")
+
+    def offsets(self, i: int) -> Tuple[int, int]:
+        cx, cy = self.coords(i)
+        bx, by, _ = self.block
+        return (cx * bx, cy * by)

@@ -1,0 +1,10 @@
+"""Test session config.
+
+x64 is enabled for the whole session: the PDE solver substrate needs f64
+residuals below 1e-7 (paper thresholds); model code is dtype-explicit
+(bf16/f32 params) so it is unaffected.  Device count stays at 1 — only
+launch/dryrun.py forces 512 host devices, never tests.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,99 @@
+"""Engine semantics + hypothesis properties of the asynchronous model (2)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.async_engine import AsyncEngine, DelayModel, EngineConfig, Msg
+from repro.core.protocols import PFAIT
+from repro.solvers.convdiff import ConvDiffProblem
+
+
+def _cfg(seed, fifo=False, het=0.3):
+    return EngineConfig(
+        compute=DelayModel(1e-3, sigma=0.4),
+        channel=DelayModel(5e-4, sigma=0.8),
+        fifo=fifo,
+        het_factor=het,
+        seed=seed,
+        max_iters=30_000,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_termination_under_random_delays(seed):
+    prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=seed % 7)
+    eng = AsyncEngine(prob, _cfg(seed), PFAIT(1e-5, ord=prob.ord))
+    r = eng.run()
+    assert r.terminated
+    assert r.r_star < 1e-3  # margin holds loosely even with wild delays
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fifo_channels_deliver_in_order(seed):
+    """Property: with fifo=True, per-channel delivery order == send order."""
+    prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=1)
+    eng = AsyncEngine(prob, _cfg(seed, fifo=True), PFAIT(1e-5, ord=prob.ord))
+    deliveries = []
+    orig = eng.protocol.on_data
+
+    def spy(engine, msg, t):
+        deliveries.append((msg.src, msg.dst, msg.send_time, t))
+        return orig(engine, msg, t)
+
+    eng.protocol.on_data = spy
+    eng.run()
+    per_chan = {}
+    for src, dst, ts, td in deliveries:
+        per_chan.setdefault((src, dst), []).append((ts, td))
+    for chan, events in per_chan.items():
+        send_order = [e[0] for e in events]
+        assert send_order == sorted(send_order), "engine delivered out of send order"
+        deliver_order = [e[1] for e in events]
+        assert deliver_order == sorted(deliver_order)
+
+
+def test_non_fifo_can_reorder():
+    prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=1)
+    cfg = dataclasses.replace(_cfg(3), channel=DelayModel(5e-4, sigma=2.0))
+    eng = AsyncEngine(prob, cfg, PFAIT(1e-5, ord=prob.ord))
+    deliveries = []
+    orig = eng.protocol.on_data
+
+    def spy(engine, msg, t):
+        deliveries.append((msg.src, msg.dst, msg.send_time))
+        return orig(engine, msg, t)
+
+    eng.protocol.on_data = spy
+    eng.run()
+    reordered = 0
+    per_chan = {}
+    for src, dst, ts in deliveries:
+        k = (src, dst)
+        if k in per_chan and ts < per_chan[k]:
+            reordered += 1
+        per_chan[k] = max(per_chan.get(k, -1.0), ts)
+    assert reordered > 0  # heavy-tailed delays overtake
+
+
+def test_heterogeneous_progress():
+    """card{k : i ∈ P(k)} grows for every worker, at different rates."""
+    prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=2)
+    eng = AsyncEngine(prob, _cfg(11, het=1.0), PFAIT(1e-7, ord=prob.ord))
+    r = eng.run()
+    assert int(np.min(eng.k)) > 0
+    assert int(np.max(eng.k)) > int(np.min(eng.k))  # genuinely asynchronous
+
+
+def test_exact_residual_decreases_with_iterations():
+    prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=3)
+    eng1 = AsyncEngine(prob, _cfg(5), PFAIT(1e-3, ord=prob.ord))
+    r1 = eng1.run()
+    prob2 = ConvDiffProblem(n=8, p=4, rho=0.85, seed=3)
+    eng2 = AsyncEngine(prob2, _cfg(5), PFAIT(1e-8, ord=prob2.ord))
+    r2 = eng2.run()
+    assert r2.k_max > r1.k_max
+    assert r2.r_star < r1.r_star

@@ -1,0 +1,111 @@
+"""TPU-native convergence monitor: staleness ring + the four modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import detection, termination
+
+
+def run_monitor(cfg, series):
+    st = detection.init_state(cfg)
+    fired_at = None
+    for i, v in enumerate(series):
+        st = detection.step(cfg, st, jnp.float32(v),
+                            exact_residual_fn=lambda v=v: jnp.float32(v))
+        if fired_at is None and bool(st.converged):
+            fired_at = i
+    return st, fired_at
+
+
+def test_sync_fires_immediately():
+    cfg = detection.MonitorConfig(mode="sync", eps=1.0, ord=1.0, staleness=0)
+    series = [5.0, 3.0, 0.5, 0.1]
+    _, fired = run_monitor(cfg, series)
+    assert fired == 2  # first value < 1.0
+
+
+@pytest.mark.parametrize("K", [1, 2, 4])
+def test_pfait_fires_exactly_K_late_on_monotone_series(K):
+    cfg = detection.MonitorConfig(mode="pfait", eps=1.0, ord=1.0, staleness=K)
+    series = [5.0, 3.0, 0.5, 0.2, 0.1, 0.05, 0.02, 0.01, 0.005]
+    _, fired = run_monitor(cfg, series)
+    assert fired == 2 + K  # value at index 2 becomes visible K steps later
+
+
+def test_pfait_detected_residual_is_the_stale_value():
+    cfg = detection.MonitorConfig(mode="pfait", eps=1.0, ord=1.0, staleness=2)
+    series = [5.0, 0.5, 0.4, 0.3, 0.2]
+    st, fired = run_monitor(cfg, series)
+    assert fired == 3
+    assert float(st.detected_residual) == pytest.approx(0.5)
+
+
+def test_nfais2_requires_persistence_and_exact_verification():
+    cfg = detection.MonitorConfig(mode="nfais2", eps=1.0, eps_tilde=1.0,
+                                  ord=1.0, staleness=0, persistence=3)
+    # two sub-eps checks then a spike: no fire
+    _, fired = run_monitor(cfg, [0.5, 0.5, 3.0, 0.5, 0.5])
+    assert fired is None
+    _, fired = run_monitor(cfg, [0.5, 0.5, 0.5, 0.5])
+    assert fired == 2  # third consecutive check fires + verifies
+
+
+def test_nfais2_exact_verification_rejects():
+    cfg = detection.MonitorConfig(mode="nfais2", eps=1.0, eps_tilde=1.0,
+                                  ord=1.0, staleness=0, persistence=2)
+    st = detection.init_state(cfg)
+    # stale value below eps but exact value above eps_tilde → reject
+    for v in [0.5, 0.5, 0.5]:
+        st = detection.step(cfg, st, jnp.float32(v),
+                            exact_residual_fn=lambda: jnp.float32(5.0))
+    assert not bool(st.converged)
+    assert int(st.verifications) >= 1
+
+
+def test_nfais5_two_phase_confirmation():
+    cfg = detection.MonitorConfig(mode="nfais5", eps=1.0, ord=1.0,
+                                  staleness=0, persistence=2)
+    # needs persistence 2, then confirm window of 2 more, still below
+    _, fired = run_monitor(cfg, [0.5] * 10)
+    assert fired is not None and fired >= 3
+    # convergence lost during confirmation window → no fire
+    _, fired = run_monitor(cfg, [0.5, 0.5, 9.0, 9.0, 9.0, 9.0])
+    assert fired is None
+
+
+def test_monitor_is_jittable_inside_while_loop():
+    cfg = detection.MonitorConfig(mode="pfait", eps=1e-3, ord=1.0, staleness=2)
+
+    def solve():
+        def body(state):
+            mon, k, v = state
+            mon = detection.step(cfg, mon, v)
+            return mon, k + 1, v * 0.5
+
+        def cond(state):
+            mon, k, _ = state
+            return (~mon.converged) & (k < 100)
+
+        mon, k, _ = jax.lax.while_loop(
+            cond, body, (detection.init_state(cfg), jnp.int32(0), jnp.float32(1.0))
+        )
+        return k
+
+    k = jax.jit(solve)()
+    assert 0 < int(k) < 100
+
+
+def test_threshold_helpers():
+    assert detection.pfait_threshold(1e-6, 10.0) == pytest.approx(1e-7)
+    assert termination.decade_margin(2.9) == 10.0
+    assert termination.decade_margin(12.0) == 100.0
+    assert termination.decade_margin(0.5) == 1.0
+
+
+def test_calibration_report():
+    vals = iter([1.3e-6, 1.9e-6, 0.8e-6])
+    rep = termination.calibrate_margin(lambda eps: next(vals), 1e-6, runs=3, safety=2.0)
+    assert rep.max_r == pytest.approx(1.9e-6)
+    assert rep.margin == 10.0
+    assert rep.eps_production == pytest.approx(1e-7)

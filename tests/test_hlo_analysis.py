@@ -1,0 +1,89 @@
+"""Unit tests for the loop-aware HLO analyzer (the roofline's foundation)."""
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+SYNTH = """
+HloModule synth
+
+%add_red (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %y = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%y), replica_groups=[16,16]<=[256], to_apply=%add_red
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%i2, %ar)
+}
+
+ENTRY %main (arg: f32[8,128]) -> f32[8,128] {
+  %arg = f32[8,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%zero, %arg)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert H.shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert H.shape_bytes("bf16[2,4096,5120]") == 2 * 4096 * 5120 * 2
+    assert H.shape_bytes("(f32[4], bf16[4])") == 16 + 8
+    assert H.shape_bytes("pred[]") == 1
+
+
+def test_wire_factors():
+    assert H._wire_factor("all-reduce", 16) == pytest.approx(2 * 15 / 16)
+    assert H._wire_factor("all-gather", 16) == pytest.approx(15 / 16)
+    assert H._wire_factor("reduce-scatter", 16) == 15.0
+    assert H._wire_factor("collective-permute", 16) == 1.0
+    assert H._wire_factor("all-reduce", 1) == 0.0
+
+
+def test_group_size_parsing():
+    assert H._group_size("replica_groups=[16,16]<=[256]", 256) == 16
+    assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 256) == 4
+    assert H._group_size("no groups here", 99) == 99
+
+
+def test_parse_module_and_while_multiplier():
+    comps = H.parse_module(SYNTH)
+    assert set(comps) >= {"add_red", "cond", "body", "main"}
+    mult, hbm = H.execution_multipliers(comps)
+    assert mult.get("body") == 24  # trip count from the condition constant
+    assert "main" in hbm and "body" in hbm and "cond" in hbm
+
+
+def test_program_stats_scales_flops_and_collectives_by_trip_count():
+    st = H.program_stats(SYNTH, default_group=256)
+    # dot: 2 * 8 * 128 * 128 flops, executed 24 times
+    assert st.flops == pytest.approx(24 * 2 * 8 * 128 * 128)
+    assert st.flops_unscaled == pytest.approx(2 * 8 * 128 * 128)
+    assert st.coll_counts["all-reduce"] == 24
+    expected_wire = 24 * (8 * 128 * 4) * (2 * 15 / 16)
+    assert st.total_wire_bytes == pytest.approx(expected_wire)
+
+
+def test_dynamic_slice_and_dus_heuristics():
+    comps = H.parse_module(SYNTH)
+    comp = comps["body"]
+    ins = H.Instr(name="d", result_type="f32[1,128]{1,0} ", op="dynamic-slice",
+                  operands=["x"], line="")
+    assert H._instr_hbm_bytes(ins, comp, comps) == 2 * 128 * 4
+"""Gather-style reads count the slice, not the buffer."""

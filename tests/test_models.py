@@ -1,0 +1,179 @@
+"""Model substrate: per-arch smokes, decode==full, plan invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS, get_arch
+from repro.models import Model
+from repro.models import layers as L
+from repro.models.attention import plan_attention, q_valid_mask
+from repro.models.transformer import forward
+from repro.optim import AdamW, constant_schedule
+
+B, S = 2, 32
+
+
+def make_inputs(cfg, key):
+    if cfg.frontend is None:
+        return jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return jax.random.normal(key, (B, S, cfg.frontend_dim), jnp.float32)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch):
+    """Reduced same-family config: one train step, finite loss/grads,
+    correct output shapes, no NaNs."""
+    cfg = reduced(get_arch(arch))
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    opt = AdamW(constant_schedule(1e-3))
+    ts = m.init_train_state(key, opt)
+    step_fn, _ = m.make_train_step(opt)
+    batch = {
+        "inputs": make_inputs(cfg, jax.random.PRNGKey(1)),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size),
+    }
+    ts2, metrics = jax.jit(step_fn)(ts, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    for leaf in jax.tree.leaves(ts2.params):
+        assert not bool(jnp.any(jnp.isnan(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_shapes(arch):
+    cfg = reduced(get_arch(arch))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    x, head, _, aux = forward(params, make_inputs(cfg, jax.random.PRNGKey(1)),
+                              m.plan, m._ctx("train"))
+    assert x.shape == (B, S, cfg.d_model)
+    logits = L.lm_head(x, head)
+    assert logits.shape == (B, S, m.plan.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_decode_matches_full_forward(arch):
+    cfg = reduced(get_arch(arch))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    inputs = make_inputs(cfg, jax.random.PRNGKey(1))
+    x, head, _, _ = forward(params, inputs, m.plan, m._ctx("train"))
+    full_logits = L.lm_head(x, head)
+    prefill = jax.jit(m.make_prefill())
+    decode = jax.jit(m.make_decode_step())
+    _, cache = prefill(params, inputs[:, : S - 1])
+
+    def extend(u):
+        out = []
+        for entry in u:
+            e = {}
+            for k2, v2 in entry.items():
+                if k2 == "kv":
+                    e["kv"] = {kk: jnp.pad(vv, ((0, 0), (0, 0), (0, 4), (0, 0), (0, 0)))
+                               for kk, vv in v2.items()}
+                else:
+                    e[k2] = v2
+            out.append(e)
+        return tuple(out)
+
+    cache = extend(cache)
+    last = inputs[:, S - 1:] if cfg.frontend is None else inputs[:, S - 1:, :]
+    dl, _ = decode(params, cache, last, jnp.int32(S - 1))
+    np.testing.assert_allclose(
+        np.asarray(dl[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32),
+        atol=5e-2, rtol=1e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention TP plan invariants (all 10 archs at the production TP width)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", sorted(a for a in ARCHS if get_arch(a).has_attention))
+def test_attention_plan_preserves_gqa_mapping_at_tp16(arch):
+    cfg = get_arch(arch)
+    p = plan_attention(cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, 16)
+    assert p.slots % 16 == 0
+    assert p.q_heads_padded % 16 == 0
+    assert p.q_heads_padded >= cfg.num_heads
+    # every original q head lands in a slot holding a copy of ITS kv group
+    for h in range(cfg.num_heads):
+        slot, pos = p.q_slot_pos(h)
+        assert 0 <= pos < p.q_per_slot
+        assert p.kv_slot_group(slot) == h // (cfg.num_heads // cfg.num_kv_heads)
+    # mask marks exactly the original heads
+    mask = np.asarray(q_valid_mask(p))
+    assert int(mask.sum()) == cfg.num_heads
+
+
+def test_q_padding_is_neutral():
+    """Padded q heads must not affect outputs (zero wo rows)."""
+    cfg = reduced(get_arch("qwen2-1.5b"))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    inputs = make_inputs(cfg, jax.random.PRNGKey(1))
+    x1, head, _, _ = forward(params, inputs, m.plan, m._ctx("train"))
+
+    # corrupt the padded wq positions wildly: outputs must be unchanged
+    qmask = np.asarray(q_valid_mask(m.plan.attn))  # [slots, qps]
+    def corrupt(unit):
+        unit = dict(unit)
+        a = dict(unit["attn"])
+        noise = 37.0 * (1.0 - qmask)[None, None, :, :, None]
+        a["wq"] = a["wq"] + noise.astype(a["wq"].dtype)
+        unit["attn"] = a
+        return unit
+
+    params2 = dict(params)
+    params2["layers"] = tuple(corrupt(u) for u in params["layers"])
+    x2, _, _, _ = forward(params2, inputs, m.plan, m._ctx("train"))
+    np.testing.assert_allclose(np.asarray(x1, np.float32),
+                               np.asarray(x2, np.float32), atol=1e-5)
+
+
+def test_grad_fixups_tie_kv_and_mask_padding():
+    cfg = reduced(get_arch("qwen2-1.5b"), num_heads=4, num_kv_heads=2, head_dim=16)
+    # force a replicated-kv plan by constructing at tp>1 via plan override
+    from repro.models.transformer import make_plan
+    m = Model(cfg)
+    m.plan = make_plan(cfg, tp=4)  # kv=2 < tp=4 → repl=2
+    assert m.plan.attn.kv_repl == 2
+    params = m.init(jax.random.PRNGKey(0))
+    grads = jax.tree.map(lambda p: jnp.ones_like(p), params)
+    fixed = m.apply_grad_fixups(grads)
+    for u in fixed["layers"]:
+        wk = np.asarray(u["attn"]["wk"], np.float32)
+        s = wk.shape
+        wkr = wk.reshape(s[0], s[1], m.plan.attn.groups, m.plan.attn.kv_repl, s[3])
+        # replicas carry identical (summed) gradients
+        np.testing.assert_allclose(wkr[:, :, :, 0], wkr[:, :, :, 1])
+        # padded wo rows zeroed
+        qmask = np.asarray(q_valid_mask(m.plan.attn))
+        wo = np.asarray(u["attn"]["wo"], np.float32)
+        assert np.all(wo[:, qmask == 0] == 0)  # [steps, slots, qps, H, D]
+
+
+def test_microbatched_train_step_matches_plain():
+    cfg = reduced(get_arch("qwen2-1.5b"))
+    m = Model(cfg)
+    opt = AdamW(constant_schedule(1e-3))
+    batch = {
+        "inputs": make_inputs(cfg, jax.random.PRNGKey(1)),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size),
+    }
+    ts = m.init_train_state(jax.random.PRNGKey(0), opt)
+    s1, _ = m.make_train_step(opt, microbatches=1)
+    s2, _ = m.make_train_step(opt, microbatches=2)
+    t1, m1 = jax.jit(s1)(ts, batch)
+    ts_b = m.init_train_state(jax.random.PRNGKey(0), opt)
+    t2, m2 = jax.jit(s2)(ts_b, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(t1.params), jax.tree.leaves(t2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=3e-2)

@@ -1,0 +1,127 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import detection
+from repro.core.residual import combine_contributions, local_contribution, sigma
+from repro.models.moe import MoEPlan, moe_init
+from repro.models import moe as moe_mod
+
+
+# ---------------------------------------------------------------------------
+# Detection ring semantics: the monitor sees exactly the K-stale value
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    K=st.integers(0, 5),
+    series=st.lists(st.floats(0.01, 100.0), min_size=1, max_size=30),
+    eps=st.floats(0.05, 50.0),
+)
+def test_pfait_fires_iff_stale_value_below_eps(K, series, eps):
+    cfg = detection.MonitorConfig(mode="pfait", eps=eps, ord=1.0, staleness=K)
+    stt = detection.init_state(cfg)
+    fired_at = None
+    for i, v in enumerate(series):
+        stt = detection.step(cfg, stt, jnp.float32(v))
+        if fired_at is None and bool(stt.converged):
+            fired_at = i
+    # model: visible at step i is series[i-K]; fires at first i with
+    # series[i-K] < eps
+    expect = None
+    for i in range(len(series)):
+        if i - K >= 0 and series[i - K] < eps:
+            expect = i
+            break
+    assert fired_at == expect
+
+
+# ---------------------------------------------------------------------------
+# σ properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    parts=st.lists(
+        st.lists(st.floats(-100, 100), min_size=1, max_size=8),
+        min_size=1, max_size=5,
+    ),
+    ordv=st.sampled_from([1.0, 2.0, 4.0, float("inf")]),
+)
+def test_sigma_partition_invariance(parts, ordv):
+    """σ over any partition of the data equals the norm of the whole."""
+    full = np.concatenate([np.asarray(p) for p in parts])
+    contribs = [float(local_contribution(jnp.asarray(np.asarray(p)), ordv))
+                for p in parts]
+    got = combine_contributions(contribs, ordv)
+    if np.isinf(ordv):
+        want = np.abs(full).max()
+    else:
+        want = (np.abs(full) ** ordv).sum() ** (1 / ordv)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# MoE pack/unpack roundtrip
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), E=st.sampled_from([2, 4, 8]),
+       k=st.sampled_from([1, 2]))
+def test_moe_pack_positions_unique_and_bounded(seed, E, k):
+    from repro.configs.base import ModelConfig
+
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=8,
+                      vocab_size=32, num_heads=2, num_kv_heads=1, d_ff=16,
+                      num_experts=E, experts_per_token=min(k, E))
+    plan = moe_mod.plan_moe(cfg, tp=1, capacity_factor=1.0)
+    key = jax.random.PRNGKey(seed)
+    w = moe_init(key, plan, gated=True, dtype=jnp.float32)
+    t = 12
+    tokens = jax.random.normal(jax.random.fold_in(key, 1), (t, 8))
+    C = plan.capacity(t)
+    send, (slots, pos, wts), _ = moe_mod._route_and_pack(
+        tokens, w["router"], plan, C, jnp.ones((t,))
+    )
+    slots_n, pos_n, w_n = map(np.asarray, (slots, pos, wts))
+    kept = w_n > 0
+    assert np.all(pos_n[kept] < C)
+    assert np.all(slots_n[kept] < plan.virtual_experts)
+    coords = list(zip(slots_n[kept], pos_n[kept]))
+    assert len(coords) == len(set(coords))
+    # kept tokens' buffer rows equal the token values
+    send_n = np.asarray(send)
+    tok_n = np.asarray(tokens)
+    ti, ki = np.nonzero(kept)
+    for a, b in zip(ti[:8], ki[:8]):
+        np.testing.assert_allclose(send_n[slots_n[a, b], pos_n[a, b]], tok_n[a],
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint ↔ restore identity for arbitrary pytrees
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_checkpoint_restore_identity(seed, tmp_path_factory):
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((3, 4)), jnp.float32),
+        "nest": (jnp.asarray(rng.integers(0, 9, (5,))),
+                 {"b": jnp.asarray(rng.standard_normal(7), jnp.float32)}),
+    }
+    d = tmp_path_factory.mktemp(f"ck{seed}")
+    ck = Checkpointer(str(d))
+    ck.save(tree, 1, blocking=True)
+    back, _ = ck.restore(like=tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,115 @@
+"""Faithful event-level protocols on the asynchronous-iterations engine."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.async_engine import AsyncEngine, stable_platform, unstable_platform
+from repro.core.protocols import NFAIS2, NFAIS5, PFAIT, ExactSnapshotFIFO
+from repro.solvers.convdiff import ConvDiffProblem
+
+EPS = 1e-6
+
+
+def run(proto_name, seed=0, n=12, p=4, fifo=None, eps=EPS, platform=stable_platform):
+    prob = ConvDiffProblem(n=n, p=p, rho=0.9, seed=seed)
+    cfg = platform()
+    if proto_name == "exact":
+        cfg = dataclasses.replace(cfg, fifo=True)
+        proto = ExactSnapshotFIFO(eps, ord=prob.ord)
+    elif proto_name == "pfait":
+        proto = PFAIT(eps, ord=prob.ord)
+    elif proto_name == "nfais2":
+        proto = NFAIS2(eps, ord=prob.ord)
+    else:
+        proto = NFAIS5(eps, ord=prob.ord, m=4)
+    if fifo is not None:
+        cfg = dataclasses.replace(cfg, fifo=fifo)
+    eng = AsyncEngine(prob, dataclasses.replace(cfg, seed=seed, max_iters=30_000), proto)
+    return eng, eng.run()
+
+
+@pytest.mark.parametrize("proto", ["pfait", "nfais2", "nfais5", "exact"])
+def test_all_protocols_terminate(proto):
+    _, r = run(proto)
+    assert r.terminated
+    assert np.isfinite(r.r_star)
+    assert r.k_max > 0
+
+
+def test_pfait_sends_no_protocol_messages():
+    _, r = run("pfait")
+    assert set(r.msg_counts) == {"data"}
+    assert r.reductions > 1  # successive non-blocking reductions
+
+
+def test_nfais2_carries_interface_data_nfais5_does_not():
+    _, r2 = run("nfais2")
+    _, r5 = run("nfais5")
+    bytes2 = r2.msg_bytes.get("snap2", 0) / max(r2.msg_counts.get("snap2", 1), 1)
+    bytes5 = r5.msg_bytes.get("snap5", 0) / max(r5.msg_counts.get("snap5", 1), 1)
+    # O(interface) vs O(1): 6×12 f64 plane = 576 B vs 16 B empty message
+    assert bytes2 > 20 * bytes5
+
+
+def test_detection_guarantees_nfais2():
+    """NFAIS2 records are consistent → detected residual is exact for the
+    snapshot vector, hence below ε."""
+    for seed in range(3):
+        _, r = run("nfais2", seed=seed)
+        assert r.detected_residual < EPS
+
+
+def test_exact_snapshot_consistency_invariant():
+    """CL+FIFO: recorded deps equal the interface of the recorded owner
+    component (the cut is consistent)."""
+    prob = ConvDiffProblem(n=12, p=4, rho=0.9, seed=5)
+    cfg = dataclasses.replace(stable_platform(), fifo=True, seed=5, max_iters=30_000)
+    proto = ExactSnapshotFIFO(EPS, ord=prob.ord)
+    eng = AsyncEngine(prob, cfg, proto)
+    r = eng.run()
+    assert r.terminated
+    for i in range(prob.p):
+        for j in prob.neighbors(i):
+            want = prob.interface(j, proto.rec_own[j], i)
+            got = proto.rec_deps[i][j]
+            np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_exact_snapshot_sigma_equals_global_residual_of_cut():
+    from repro.core.residual import combine_contributions
+
+    prob = ConvDiffProblem(n=12, p=4, rho=0.9, seed=7)
+    cfg = dataclasses.replace(stable_platform(), fifo=True, seed=7, max_iters=30_000)
+    proto = ExactSnapshotFIFO(EPS, ord=prob.ord)
+    eng = AsyncEngine(prob, cfg, proto)
+    r = eng.run()
+    assert r.terminated
+    contribs = [prob.local_residual(i, proto.rec_own[i], proto.rec_deps[i])
+                for i in range(prob.p)]
+    sigma = combine_contributions(contribs, prob.ord)
+    exact = prob.exact_residual(proto.rec_own)
+    np.testing.assert_allclose(sigma, exact, rtol=1e-10)
+
+
+def test_pfait_faster_than_snapshot_protocols():
+    """Table 2/5 structure: PFAIT saves the snapshot/confirmation phases."""
+    wt = {}
+    for proto in ["pfait", "nfais2", "nfais5"]:
+        ts = []
+        for seed in range(3):
+            _, r = run(proto, seed=seed)
+            assert r.terminated
+            ts.append(r.wtime)
+        wt[proto] = np.mean(ts)
+    assert wt["pfait"] <= wt["nfais2"] * 1.05
+    assert wt["pfait"] <= wt["nfais5"] * 1.05
+
+
+def test_pfait_margin_restores_guarantee():
+    """Table 4 structure: PFAIT at ε = ε̃/10 keeps r* < ε̃ even when PFAIT
+    at ε = ε̃ may overshoot."""
+    for seed in range(3):
+        _, r = run("pfait", seed=seed, eps=EPS / 10, platform=unstable_platform)
+        assert r.terminated
+        assert r.r_star < EPS

@@ -1,0 +1,42 @@
+"""Distributed residual evaluation r = σ(r_1, …, r_p)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import residual as res
+
+
+@pytest.mark.parametrize("ord", [2.0, float("inf"), 1.0, 4.0])
+def test_sigma_of_contributions_matches_global_norm(ord):
+    rng = np.random.default_rng(0)
+    parts = [rng.standard_normal((13, 7)) for _ in range(5)]
+    full = np.concatenate([p.ravel() for p in parts])
+    contribs = jnp.asarray([res.local_contribution(jnp.asarray(p), ord) for p in parts])
+    got = float(res.sigma(contribs, ord))
+    if np.isinf(ord):
+        want = np.abs(full).max()
+    else:
+        want = (np.abs(full) ** ord).sum() ** (1.0 / ord)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_global_residual_reference():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(100))
+    fx = jnp.asarray(rng.standard_normal(100))
+    np.testing.assert_allclose(
+        float(res.global_residual(x, fx, 2)),
+        np.linalg.norm(np.asarray(x) - np.asarray(fx)),
+        rtol=1e-6,
+    )
+    np.testing.assert_allclose(
+        float(res.global_residual(x, fx, float("inf"))),
+        np.abs(np.asarray(x) - np.asarray(fx)).max(),
+        rtol=1e-6,
+    )
+
+
+def test_combine_contributions_host():
+    parts = [4.0, 9.0, 16.0]
+    assert res.combine_contributions(parts, 2) == pytest.approx(np.sqrt(29.0))
+    assert res.combine_contributions(parts, float("inf")) == 16.0
