@@ -34,20 +34,30 @@ def make_protocol(name: str, eps: float, ord_: float, m: int = 4):
 
 
 def run_cell(protocol: str, eps: float, n: int, p: int, rho: float = 0.93,
-             seeds=SEEDS, max_iters: int = 60_000, platform=stable_platform) -> Dict:
-    rs, wts, kmaxs, wall = [], [], [], 0.0
+             seeds=SEEDS, max_iters: int = 60_000, platform=stable_platform,
+             fused: bool = True) -> Dict:
+    rs, wts, kmaxs, iters, wall = [], [], [], 0, 0.0
     for seed in seeds:
         prob = ConvDiffProblem(n=n, p=p, rho=rho, seed=seed)
         cfg = dataclasses.replace(platform(), seed=seed, max_iters=max_iters,
-                                  fifo=(protocol == "exact"))
+                                  fifo=(protocol == "exact"), fused=fused)
         t0 = time.time()
         eng = AsyncEngine(prob, cfg, make_protocol(protocol, eps, prob.ord))
         r = eng.run()
         wall += time.time() - t0
-        assert r.terminated, (protocol, eps, n, p, seed)
+        if not r.terminated:
+            # a real error, not a bare assert: survives `python -O` and tells
+            # the reader which cell to reproduce
+            raise RuntimeError(
+                f"benchmark cell did not terminate: protocol={protocol} "
+                f"eps={eps:g} n={n} p={p} rho={rho} seed={seed} "
+                f"max_iters={max_iters} fused={fused} "
+                f"(k_max={r.k_max}, last exact residual r*={r.r_star:.3e})"
+            )
         rs.append(r.r_star)
         wts.append(r.wtime)
         kmaxs.append(r.k_max)
+        iters += int(np.sum(eng.k))
     return {
         "protocol": protocol,
         "eps": eps,
@@ -58,6 +68,8 @@ def run_cell(protocol: str, eps: float, n: int, p: int, rho: float = 0.93,
         "wtime": float(np.mean(wts)),
         "k_max": float(np.mean(kmaxs)),
         "wall_s": wall,
+        "sim_iters": iters,
+        "fused": fused,
     }
 
 

@@ -55,11 +55,10 @@ def measure_solver(variant: str, inner_sweeps: int = 4, n: int = 1024,
     b = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, spec))
     compiled = jax.jit(solve).lower(x0, b).compile()
     pstats = hlo_analysis.program_stats(compiled.as_text(), default_group=256)
-    # Normalise per sweep: infer how many outer iterations the parser folded
-    # in from the halo-permute count (8 permutes per outer iteration: 4 faces
-    # canonicalised into 8 one-directional shifts).
-    permutes = pstats.coll_counts.get("collective-permute", 8)
-    outers_counted = max(permutes / 8.0, 1.0)
+    # Normalise per sweep with the analyzer's loop multiplier (permute-count
+    # inference is jax-version dependent: 4 faces lower to 4 or 8
+    # one-directional shifts per outer iteration).
+    outers_counted = max(pstats.loop_trip_max, 1.0)
     sweeps_counted = outers_counted * inner_sweeps
     cells = n * n * n / 256  # per device
     stencil_flops = 14.0 * cells  # 7-pt stencil: 6 mul + 6 add + sub + div

@@ -12,6 +12,22 @@ The numerical work per sweep is delegated to a ``DecomposedProblem``
 pure host-side discrete-event simulation (heapq), since protocol logic is
 inherently sequential message processing.
 
+**Fused hot path** (``EngineConfig.fused``, default on): when the problem
+implements the optional ``update_with_residual(i, x_i, deps) -> (x_new,
+r_i)`` extension, the engine prefers it over the ``update`` +
+``local_residual`` pair — one ghost assembly and a shared off-diagonal
+apply per sweep instead of two full passes.  ``r_i`` is then the residual
+of the *pre-sweep* state (the relaxation's free by-product), one sweep
+staler than the legacy post-update evaluation — the same staleness the
+detection protocols already absorb from the network.  Additionally the
+engine asks the protocol (``wants_residual`` hook, default True) whether it
+will consume ``r_i`` this iteration and skips residual evaluation entirely
+when not — PFAIT never consumes per-iteration residuals (it samples live
+state during reductions), and the snapshot protocols stop consuming them
+once a worker's record is taken/confirmed.  Protocols receive ``r_i = NaN``
+for iterations they declared unused.  ``fused=False`` restores the exact
+seed behaviour (benchmarks/bench_fused.py measures the head-to-head).
+
 Measured outputs per run (the paper's reported quantities):
   * ``r_star``  — final exact residual r(x̄) at the instant every process
                   has stopped (Tables 1, 3, 4),
@@ -61,6 +77,15 @@ class DecomposedProblem(TProtocol):
         """r(x̄) for the assembled global vector (ground truth)."""
         ...
 
+    # Optional extension (fused hot path — see module docstring): one sweep
+    # with the pre-sweep residual as a by-product.  Must satisfy
+    #   update_with_residual(i, x, deps)
+    #     == (update(i, x, deps), local_residual(i, x, deps))
+    # with r_i None when need_residual=False.  The engine feature-detects it.
+    #
+    # def update_with_residual(self, i, x_i, deps, need_residual=True):
+    #     ...
+
 
 # ---------------------------------------------------------------------------
 # Delay models
@@ -78,6 +103,9 @@ class DelayModel:
     floor: float = 1e-6
 
     def sample(self, rng: np.random.Generator, n: Optional[int] = None):
+        if n is None:  # scalar fast path — the engine hot loop draws ~4/sweep
+            return max(self.base * rng.lognormal(mean=0.0, sigma=self.sigma),
+                       self.floor)
         s = self.base * rng.lognormal(mean=0.0, sigma=self.sigma, size=n)
         return np.maximum(s, self.floor)
 
@@ -92,6 +120,8 @@ class EngineConfig:
     max_time: float = 1e9
     max_iters: int = 200_000
     seed: int = 0
+    fused: bool = True                     # prefer update_with_residual + skip
+                                           # residuals the protocol won't read
 
 
 # paper-flavoured presets.  Delays are scaled so that interface data and
@@ -165,6 +195,11 @@ class AsyncEngine:
         self.rng = np.random.default_rng(cfg.seed)
         p = problem.p
         self.p = p
+        # fused hot path: feature-detect the optional problem/protocol hooks
+        self._use_fused = cfg.fused and callable(
+            getattr(problem, "update_with_residual", None)
+        )
+        self._wants_residual = getattr(protocol, "wants_residual", None)
         # per-process state
         self.x: List[np.ndarray] = [problem.init_local(i) for i in range(p)]
         self.deps: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
@@ -187,6 +222,7 @@ class AsyncEngine:
         self.detect_time: Optional[float] = None
         self.detected_residual: float = float("inf")
         self.now = 0.0
+        self._exhaust_deadline: Optional[float] = None
 
     # -- event plumbing ----------------------------------------------------
     def schedule(self, t: float, kind: str, payload: Any = None) -> None:
@@ -202,9 +238,11 @@ class AsyncEngine:
             self._fifo_last[key] = deliver
         msg.send_time = t
         if msg.nbytes == 0:
-            msg.nbytes = (
-                int(np.asarray(msg.payload).nbytes) if msg.payload is not None else 16
-            )
+            p = msg.payload
+            if isinstance(p, np.ndarray):
+                msg.nbytes = p.nbytes
+            else:
+                msg.nbytes = int(np.asarray(p).nbytes) if p is not None else 16
         self.msg_counts[msg.kind] = self.msg_counts.get(msg.kind, 0) + 1
         self.msg_bytes[msg.kind] = self.msg_bytes.get(msg.kind, 0) + msg.nbytes
         self.schedule(deliver, "deliver", msg)
@@ -265,13 +303,38 @@ class AsyncEngine:
                 break
             if self.detect_time is not None and t > float(np.max(self.stop_time)):
                 break
+            if (self._exhaust_deadline is not None
+                    and self.detect_time is None
+                    and t > self._exhaust_deadline):
+                # every worker hit max_iters and no detection fired within
+                # the grace window: the state is frozen, so endlessly
+                # relaunching reductions (PFAIT) would never terminate —
+                # return undetected instead of hanging
+                break
             if kind == "compute":
                 i = payload
                 if t > self.stop_time[i] or self.k[i] >= cfg.max_iters:
+                    if (self.k[i] >= cfg.max_iters
+                            and self._exhaust_deadline is None
+                            and int(self.k.min()) >= cfg.max_iters):
+                        # grace: let in-flight data drain + a few reduction
+                        # rounds sample the final (now frozen) state
+                        self._exhaust_deadline = t + 100 * (
+                            self.cfg.channel.base + self.cfg.hop_latency
+                        )
                     continue
-                self.x[i] = self.problem.update(i, self.x[i], self.deps[i])
+                if self._use_fused:
+                    need_r = (self._wants_residual is None
+                              or self._wants_residual(self, i))
+                    self.x[i], r_i = self.problem.update_with_residual(
+                        i, self.x[i], self.deps[i], need_residual=need_r
+                    )
+                    if r_i is None:
+                        r_i = float("nan")  # protocol declared it unused
+                else:
+                    self.x[i] = self.problem.update(i, self.x[i], self.deps[i])
+                    r_i = self.problem.local_residual(i, self.x[i], self.deps[i])
                 self.k[i] += 1
-                r_i = self.problem.local_residual(i, self.x[i], self.deps[i])
                 for j in self.problem.neighbors(i):
                     self.send(
                         Msg(src=i, dst=j, kind="data",
@@ -312,4 +375,7 @@ class AsyncEngine:
 
     # convenience for protocols
     def live_local_residual(self, i: int) -> float:
+        fast = getattr(self.problem, "local_residual_fast", None)
+        if self._use_fused and callable(fast):
+            return fast(i, self.x[i], self.deps[i])
         return self.problem.local_residual(i, self.x[i], self.deps[i])

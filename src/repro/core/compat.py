@@ -1,0 +1,39 @@
+"""jax API compat shims.
+
+The repo targets current jax, but several deployment targets still run
+0.4.x where ``jax.shard_map``, ``jax.sharding.AxisType`` and
+``jax.lax.axis_size`` don't exist yet.  Everything version-dependent goes
+through here so call sites stay clean.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (new, check_vma) or ``jax.experimental.shard_map``
+    (0.4.x, check_rep) with replication checking off either way."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer releases."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size_compat(a: str):
+    """Static mesh-axis size inside shard_map bodies across versions."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)  # older jax: statically-known collective

@@ -52,6 +52,12 @@ class BaseProtocol:
     def on_message(self, eng: AsyncEngine, msg: Msg, t: float) -> None:
         pass
 
+    def wants_residual(self, eng: AsyncEngine, i: int) -> bool:
+        """Will ``on_iteration`` consume ``r_i`` for worker i this iteration?
+        The engine's fused path skips residual evaluation when False (the
+        protocol then receives ``r_i = NaN``)."""
+        return True
+
     # shared helper: tree-reduction completion latency
     def _reduce_latency(self, eng: AsyncEngine) -> float:
         return 2 * math.ceil(math.log2(max(eng.p, 2))) * eng.cfg.hop_latency
@@ -71,6 +77,11 @@ class PFAIT(BaseProtocol):
     """
 
     name = "pfait"
+
+    def wants_residual(self, eng: AsyncEngine, i: int) -> bool:
+        # Zero per-iteration detection work: contributions are sampled from
+        # live state by the reduction service, never from on_iteration.
+        return False
 
     def on_start(self, eng: AsyncEngine, t: float) -> None:
         self._launch(eng, t)
@@ -126,6 +137,9 @@ class NFAIS2(BaseProtocol):
             self.rec_own[i] = None
             self.rec_deps[i] = dict()
         self._reducing = False
+
+    def wants_residual(self, eng: AsyncEngine, i: int) -> bool:
+        return self.rec_own[i] is None  # recorded workers stop checking r_i
 
     def on_iteration(self, eng: AsyncEngine, i: int, t: float, r_i: float) -> None:
         if eng.detect_time is not None:
@@ -213,11 +227,22 @@ class NFAIS5(BaseProtocol):
             self.rec_deps[i] = dict()
         self.supp[:] = -1
         self.confirmed[:] = False
+        # Require m *fresh* sub-ε sweeps before re-recording: confirmed
+        # workers stop evaluating r_i (wants_residual), so their counter is
+        # frozen — carrying it into the next round would let a worker
+        # re-record off stale persistence.
+        self.consec[:] = 0
         self._reducing = False
+
+    def wants_residual(self, eng: AsyncEngine, i: int) -> bool:
+        # confirmed workers are done checking local convergence this round
+        return not (self.rec_own[i] is not None and self.confirmed[i])
 
     def on_iteration(self, eng: AsyncEngine, i: int, t: float, r_i: float) -> None:
         if eng.detect_time is not None:
             return
+        if math.isnan(r_i):
+            return  # skipped evaluation (wants_residual was False): freeze
         below = r_i < self.eps
         self.consec[i] = self.consec[i] + 1 if below else 0
 
@@ -326,6 +351,9 @@ class ExactSnapshotFIFO(BaseProtocol):
         self.rec_own[i] = np.array(eng.x[i], copy=True)
         for j in eng.problem.neighbors(i):
             eng.send(Msg(src=i, dst=j, kind="marker", round=self.round), t)
+
+    def wants_residual(self, eng: AsyncEngine, i: int) -> bool:
+        return self.rec_own[i] is None
 
     def on_iteration(self, eng: AsyncEngine, i: int, t: float, r_i: float) -> None:
         if eng.detect_time is not None:

@@ -6,7 +6,17 @@ tile the (x, y) plane with the full z-pencil resident (the paper's
 decomposition keeps z local, §4.1) and produce BOTH the swept block and the
 block's residual-norm partial in one HBM pass — the stencil is memory-bound,
 so fusing the detection pass is a ~2× traffic saving (validated in
-EXPERIMENTS.md §Perf).
+EXPERIMENTS.md §Perf).  Two sweep flavours are fused:
+
+* ``fused_sweep_residual``       — Jacobi sweep (±1 halo window);
+* ``fused_rbgs_sweep_residual``  — the paper's hybrid red-black GS sweep
+  (±2 halo window: each tile recomputes its ring's color-0 updates locally,
+  so the two-color dependency never crosses tiles and the sweep stays a
+  single grid pass).
+
+Both report the residual of the *input* state (``b − A x_in``), i.e. the
+detection contribution is one sweep staler than a dedicated post-sweep pass
+— exactly the trade the paper's protocol-free detection is built to absorb.
 
 Halo handling: the ghosted input stays in HBM (``memory_space=ANY``) and
 each (x, y) tile loads its overlapping ``(tx+2, ty+2, bz+2)`` window with an
@@ -32,6 +42,18 @@ except Exception:  # pragma: no cover
     _ANY = None
 
 
+def _stencil_off(w, xm, xp, ym, yp, zm, zp):
+    """Off-diagonal apply over a ghosted window: (sx, sy, sz) → (sx−2, sy−2, sz−2)."""
+    return (
+        xm * w[:-2, 1:-1, 1:-1]
+        + xp * w[2:, 1:-1, 1:-1]
+        + ym * w[1:-1, :-2, 1:-1]
+        + yp * w[1:-1, 2:, 1:-1]
+        + zm * w[1:-1, 1:-1, :-2]
+        + zp * w[1:-1, 1:-1, 2:]
+    )
+
+
 def _kernel(g_ref, b_ref, coef_ref, new_ref, res_ref, *, op: str, linf: bool,
             tx: int, ty: int):
     i = pl.program_id(0)
@@ -45,14 +67,7 @@ def _kernel(g_ref, b_ref, coef_ref, new_ref, res_ref, *, op: str, linf: bool,
     b = b_ref[...]
     c = coef_ref[...]
     diag, xm, xp, ym, yp, zm, zp = c[0], c[1], c[2], c[3], c[4], c[5], c[6]
-    off = (
-        xm * g[:-2, 1:-1, 1:-1]
-        + xp * g[2:, 1:-1, 1:-1]
-        + ym * g[1:-1, :-2, 1:-1]
-        + yp * g[1:-1, 2:, 1:-1]
-        + zm * g[1:-1, 1:-1, :-2]
-        + zp * g[1:-1, 1:-1, 2:]
-    )
+    off = _stencil_off(g, xm, xp, ym, yp, zm, zp)
     r = b - (diag * g[1:-1, 1:-1, 1:-1] + off)
     if op == "sweep":
         new_ref[...] = (b - off) / diag
@@ -62,6 +77,99 @@ def _kernel(g_ref, b_ref, coef_ref, new_ref, res_ref, *, op: str, linf: bool,
         res_ref[0, 0] = jnp.max(jnp.abs(r)).astype(jnp.float32)
     else:
         res_ref[0, 0] = jnp.sum((r * r).astype(jnp.float32))
+
+
+def _rbgs_kernel(g_ref, b_ref, coef_ref, oxy_ref, new_ref, res_ref, *,
+                 linf: bool, tx: int, ty: int, bx: int, by: int):
+    """Single-pass hybrid red-black GS sweep fused with the pre-sweep residual.
+
+    Input is the twice-padded ghosted block (±2 halo in x/y so the tile can
+    redo its ring's color-0 updates instead of waiting on neighbour tiles —
+    cross-tile color-1 dependencies become local recompute) and the ±1
+    zero-padded rhs.  The residual shares the first off-diagonal apply, so
+    the whole hybrid sweep + detection contribution is one HBM pass."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bz2 = g_ref.shape[2]
+    bz = bz2 - 2
+    w = pl.load(
+        g_ref,
+        (pl.ds(i * tx, tx + 4), pl.ds(j * ty, ty + 4), pl.ds(0, bz2)),
+    )
+    bw = pl.load(
+        b_ref,
+        (pl.ds(i * tx, tx + 2), pl.ds(j * ty, ty + 2), pl.ds(0, bz)),
+    )
+    c = coef_ref[...]
+    diag, xm, xp, ym, yp, zm, zp = c[0], c[1], c[2], c[3], c[4], c[5], c[6]
+    off_w = _stencil_off(w, xm, xp, ym, yp, zm, zp)    # (tx+2, ty+2, bz)
+    x_w = w[1:-1, 1:-1, 1:-1]                          # matching centres
+    # block coords of window positions (−1 … t+0/+1) → checkerboard + realness
+    shp = (tx + 2, ty + 2, bz)
+    gx = jax.lax.broadcasted_iota(jnp.int32, shp, 0) + i * tx - 1
+    gy = jax.lax.broadcasted_iota(jnp.int32, shp, 1) + j * ty - 1
+    gz = jax.lax.broadcasted_iota(jnp.int32, shp, 2)
+    parity = jnp.mod(gx + gy + gz + oxy_ref[0], 2)
+    real = (gx >= 0) & (gx < bx) & (gy >= 0) & (gy < by)
+    # color 0 over tile + ring (ghost ring stays frozen via the real mask)
+    upd0 = jnp.where((parity == 0) & real, (bw - off_w) / diag, x_w)
+    w1 = w.at[1:-1, 1:-1, 1:-1].set(upd0)
+    # color 1 on the tile proper, seeing same-sweep color-0 values
+    off1 = _stencil_off(w1, xm, xp, ym, yp, zm, zp)[1:-1, 1:-1, :]
+    b_t = bw[1:-1, 1:-1, :]
+    new1 = (b_t - off1) / diag
+    new_ref[...] = jnp.where(parity[1:-1, 1:-1, :] == 1, new1,
+                             upd0[1:-1, 1:-1, :])
+    r = b_t - (diag * x_w[1:-1, 1:-1, :] + off_w[1:-1, 1:-1, :])
+    if linf:
+        res_ref[0, 0] = jnp.max(jnp.abs(r)).astype(jnp.float32)
+    else:
+        res_ref[0, 0] = jnp.sum((r * r).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "linf", "interpret"))
+def fused_rbgs_sweep_residual(
+    g2: jax.Array,             # [(bx+4), (by+4), (bz+2)] twice-padded block
+    b2: jax.Array,             # [bx+2, by+2, bz] rhs, zero-padded ±1 in x/y
+    stencil_coefs: jax.Array,  # [7] (diag, xm, xp, ym, yp, zm, zp)
+    oxy: jax.Array,            # i32 scalar: ox + oy (global checkerboard phase)
+    tile: Tuple[int, int] = (8, 128),
+    linf: bool = True,
+    interpret: bool = False,
+):
+    """Hybrid RB-GS sweep + pre-sweep residual partials in one grid pass.
+
+    Returns ``(new_block [bx,by,bz], residual partials [nx, ny])`` where the
+    partials reduce ``b − A x_in`` (the *input* state's residual — the free
+    by-product of the relaxation)."""
+    bx, by = b2.shape[0] - 2, b2.shape[1] - 2
+    bz = b2.shape[2]
+    tx, ty = min(tile[0], bx), min(tile[1], by)
+    assert bx % tx == 0 and by % ty == 0, (bx, by, tx, ty)
+    nx, ny = bx // tx, by // ty
+    coefs = stencil_coefs.astype(b2.dtype)
+    oxy_arr = jnp.asarray(oxy, jnp.int32).reshape((1,))
+
+    new, res = pl.pallas_call(
+        functools.partial(_rbgs_kernel, linf=linf, tx=tx, ty=ty, bx=bx, by=by),
+        grid=(nx, ny),
+        in_specs=[
+            pl.BlockSpec(memory_space=_ANY),       # ghosted field stays in HBM
+            pl.BlockSpec(memory_space=_ANY),       # padded rhs (windowed load)
+            pl.BlockSpec(memory_space=_ANY),       # 7 scalars
+            pl.BlockSpec(memory_space=_ANY),       # checkerboard phase
+        ],
+        out_specs=[
+            pl.BlockSpec((tx, ty, bz), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bx, by, bz), b2.dtype),
+            jax.ShapeDtypeStruct((nx, ny), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2, b2, coefs, oxy_arr)
+    return new, res
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "op", "linf", "interpret"))

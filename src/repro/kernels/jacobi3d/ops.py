@@ -1,21 +1,44 @@
 """jit'd dispatch wrapper for the jacobi3d kernel.
 
-``sweep``/``residual_contribution`` are the entry points used by
-``solvers.fixed_point`` when ``SolverConfig.use_kernel`` is set; they fall
-back to the pure-jnp path (ref) off-TPU so the distributed driver runs
-everywhere.  ``interpret`` can be forced for validation.
+``sweep``/``sweep_with_contribution``/``residual_contribution`` are the entry
+points used by ``solvers.fixed_point`` when ``SolverConfig.use_kernel`` is
+set; they fall back to the pure-jnp path off-TPU so the distributed driver
+runs everywhere.  ``interpret`` can be forced for validation.
+
+Each entry does its own ghost assembly from ``(x, ghosts)`` — the Jacobi
+kernel wants the ±1 ghosted layout, the hybrid RB-GS kernel the ±2 one — so
+a caller pays exactly one assembly per sweep.  ``sweep_with_contribution``
+is the fused hot path: one assembly + one grid pass yields both the swept
+block and the detection layer's local contribution (the residual of the
+*input* state, see kernels/jacobi3d/jacobi3d.py).
+
+``PASS_COUNTS`` counts trace-time invocations per entry kind so tests can
+assert the solver drivers lower to the expected number of grid passes (in
+particular: no residual-only second pass on the fused path).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.jacobi3d.jacobi3d import fused_sweep_residual
-from repro.kernels.jacobi3d.ref import fused_sweep_residual_ref
+from repro.kernels.jacobi3d.jacobi3d import (
+    fused_rbgs_sweep_residual,
+    fused_sweep_residual,
+)
+from repro.kernels.jacobi3d.ref import fused_sweep_residual_ref, residual_partials
+from repro.solvers import gauss_seidel
 from repro.solvers.convdiff import Stencil
+
+# trace-time grid-pass instrumentation (see module docstring)
+PASS_COUNTS: Dict[str, int] = {"sweep": 0, "fused": 0, "residual": 0}
+
+
+def reset_pass_counts() -> None:
+    for k in PASS_COUNTS:
+        PASS_COUNTS[k] = 0
 
 
 def _coefs(st: Stencil) -> jnp.ndarray:
@@ -26,38 +49,105 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def sweep_and_residual(
-    st: Stencil,
-    g: jax.Array,
-    b: jax.Array,
-    tile: Tuple[int, int] = (8, 128),
-    linf: bool = True,
-    interpret: Optional[bool] = None,
-):
-    """Fused sweep + residual partials; returns (new_block, partials)."""
+# ---------------------------------------------------------------------------
+# Ghost assembly (z ghosts = Dirichlet BC = 0)
+# ---------------------------------------------------------------------------
+
+
+def ghost_pad1(x: jax.Array, ghosts) -> jax.Array:
+    """(bx+2, by+2, bz+2) ghosted block from interior + 4 (x,y) face planes
+    (the driver's canonical assembly — one definition, shared)."""
+    from repro.solvers.fixed_point import ghosted  # function-level: no cycle
+
+    return ghosted(x, ghosts)
+
+
+def ghost_pad2(x: jax.Array, ghosts) -> jax.Array:
+    """(bx+4, by+4, bz+2) twice-padded block for the RB-GS kernel: ghosts sit
+    one ring in; the outermost ring is never consumed (masked in-kernel)."""
+    gxm, gxp, gym, gyp = ghosts
+    bx, by, bz = x.shape
+    g = jnp.zeros((bx + 4, by + 4, bz + 2), x.dtype)
+    g = g.at[2:-2, 2:-2, 1:-1].set(x)
+    g = g.at[1, 2:-2, 1:-1].set(gxm)
+    g = g.at[-2, 2:-2, 1:-1].set(gxp)
+    g = g.at[2:-2, 1, 1:-1].set(gym)
+    g = g.at[2:-2, -2, 1:-1].set(gyp)
+    return g
+
+
+def _pad_b(b: jax.Array) -> jax.Array:
+    return jnp.pad(b, ((1, 1), (1, 1), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Fused sweep + residual partials (single implementation, two public faces)
+# ---------------------------------------------------------------------------
+
+
+def _sweep_impl(st, x, ghosts, b, sweep, ox, oy, tile, linf, interpret):
+    """One relaxation sweep fused with the input-state residual partials."""
     use_interp = (not _on_tpu()) if interpret is None else interpret
+    if sweep == "jacobi":
+        g = ghost_pad1(x, ghosts)
+        if use_interp and not _on_tpu():
+            # off-TPU default: the jnp oracle (identical math, XLA-fused)
+            return fused_sweep_residual_ref(g, b, _coefs(st), tile=tile, linf=linf)
+        return fused_sweep_residual(g, b, _coefs(st), tile=tile, op="sweep",
+                                    linf=linf, interpret=use_interp)
+    # hybrid red-black GS
     if use_interp and not _on_tpu():
-        # off-TPU default: the jnp oracle (identical math, XLA-fused)
-        return fused_sweep_residual_ref(g, b, _coefs(st), tile=tile, linf=linf)
-    return fused_sweep_residual(g, b, _coefs(st), tile=tile, op="sweep",
-                                linf=linf, interpret=use_interp)
+        g = ghost_pad1(x, ghosts)
+        new, r = gauss_seidel.redblack_gs_sweep_residual(st, g, b, ox, oy)
+        return new, residual_partials(r, tile=tile, linf=linf)
+    g2 = ghost_pad2(x, ghosts)
+    oxy = jnp.asarray(ox, jnp.int32) + jnp.asarray(oy, jnp.int32)
+    return fused_rbgs_sweep_residual(g2, _pad_b(b), _coefs(st), oxy,
+                                     tile=tile, linf=linf, interpret=use_interp)
 
 
-def sweep(st: Stencil, g: jax.Array, b: jax.Array, sweep: str = "jacobi",
-          ox=0, oy=0, tile: Tuple[int, int] = (8, 128)):
-    """Sweep-only entry used by solvers.fixed_point (Jacobi flavour)."""
-    new, _ = sweep_and_residual(st, g, b, tile=tile)
+def sweep(st: Stencil, x: jax.Array, ghosts, b: jax.Array,
+          sweep: str = "jacobi", ox=0, oy=0,
+          tile: Tuple[int, int] = (8, 128),
+          interpret: Optional[bool] = None) -> jax.Array:
+    """Sweep-only entry (inner sweeps that don't feed detection).  The unused
+    residual partials are dead code XLA eliminates."""
+    PASS_COUNTS["sweep"] += 1
+    new, _ = _sweep_impl(st, x, ghosts, b, sweep, ox, oy, tile, True, interpret)
     return new
+
+
+def sweep_with_contribution(st: Stencil, x: jax.Array, ghosts, b: jax.Array,
+                            sweep: str = "jacobi", ox=0, oy=0,
+                            ord: float = float("inf"),
+                            tile: Tuple[int, int] = (8, 128),
+                            interpret: Optional[bool] = None):
+    """Fused hot path: ``(new_block, contrib)`` in one assembly + one pass.
+
+    ``contrib`` is the pre-σ local contribution (max|r| for l∞, Σr² for l2)
+    of the *input* state's residual — one sweep staler than a dedicated
+    post-sweep pass, which the detection layer tolerates by design."""
+    PASS_COUNTS["fused"] += 1
+    linf = np.isinf(ord)
+    new, parts = _sweep_impl(st, x, ghosts, b, sweep, ox, oy, tile, linf,
+                             interpret)
+    return new, (jnp.max(parts) if linf else jnp.sum(parts))
 
 
 def residual_contribution(st: Stencil, g: jax.Array, b: jax.Array,
                           ord: float = float("inf"),
-                          tile: Tuple[int, int] = (8, 128)):
+                          tile: Tuple[int, int] = (8, 128),
+                          interpret: Optional[bool] = None):
+    """Residual-only pass over a ±1 ghosted block (unfused baseline path and
+    NFAIS2's exact verification)."""
+    PASS_COUNTS["residual"] += 1
     linf = np.isinf(ord)
-    if _on_tpu():
-        _, parts = fused_sweep_residual(g, b, _coefs(st), tile=tile,
-                                        op="residual", linf=linf)
-    else:
+    use_interp = (not _on_tpu()) if interpret is None else interpret
+    if use_interp and not _on_tpu():
         _, parts = fused_sweep_residual_ref(g, b, _coefs(st), tile=tile,
                                             op="residual", linf=linf)
+    else:
+        _, parts = fused_sweep_residual(g, b, _coefs(st), tile=tile,
+                                        op="residual", linf=linf,
+                                        interpret=use_interp)
     return jnp.max(parts) if linf else jnp.sum(parts)

@@ -6,6 +6,18 @@ from typing import Tuple
 import jax.numpy as jnp
 
 
+def residual_partials(r, tile: Tuple[int, int] = (8, 128), linf: bool = True):
+    """Per-(x,y)-tile residual partials of a residual block, mirroring the
+    kernel's [nx, ny] output layout."""
+    bx, by, _ = r.shape
+    tx, ty = min(tile[0], bx), min(tile[1], by)
+    nx, ny = bx // tx, by // ty
+    rt = r.reshape(nx, tx, ny, ty, -1)
+    if linf:
+        return jnp.max(jnp.abs(rt), axis=(1, 3, 4)).astype(jnp.float32)
+    return jnp.sum((rt * rt).astype(jnp.float32), axis=(1, 3, 4))
+
+
 def fused_sweep_residual_ref(g, b, coefs, tile: Tuple[int, int] = (8, 128),
                              op: str = "sweep", linf: bool = True):
     diag, xm, xp, ym, yp, zm, zp = [coefs[i] for i in range(7)]
@@ -19,12 +31,4 @@ def fused_sweep_residual_ref(g, b, coefs, tile: Tuple[int, int] = (8, 128),
     )
     r = b - (diag * g[1:-1, 1:-1, 1:-1] + off)
     new = (b - off) / diag if op == "sweep" else g[1:-1, 1:-1, 1:-1]
-    bx, by, _ = b.shape
-    tx, ty = min(tile[0], bx), min(tile[1], by)
-    nx, ny = bx // tx, by // ty
-    rt = r.reshape(nx, tx, ny, ty, -1)
-    if linf:
-        partials = jnp.max(jnp.abs(rt), axis=(1, 3, 4)).astype(jnp.float32)
-    else:
-        partials = jnp.sum((rt * rt).astype(jnp.float32), axis=(1, 3, 4))
-    return new, partials
+    return new, residual_partials(r, tile=tile, linf=linf)

@@ -161,8 +161,15 @@ def _trip_count(comp: Computation, comps: Dict[str, "Computation"]) -> int:
             has_compare = True
         m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
         if m and m.group(1) in comps:
-            if any(i.op == "compare" for i in comps[m.group(1)].instrs):
-                has_compare = True
+            # the bound and/or the compare may live inside a kLoop fusion
+            # the condition merely calls — collect from there too
+            for i2 in comps[m.group(1)].instrs:
+                if i2.op == "compare":
+                    has_compare = True
+                if i2.op == "constant":
+                    m2 = re.search(r"constant\((\d+)\)", i2.line)
+                    if m2:
+                        consts.append(int(m2.group(1)))
     if has_compare and consts:
         return max(consts)
     return 1
@@ -276,6 +283,8 @@ class ProgramStats:
     coll_bytes_alg: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     coll_bytes_wire: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     flops_unscaled: float = 0.0     # without loop multipliers (sanity)
+    loop_trip_max: float = 1.0      # largest while multiplier (per-iteration
+                                    # normalisation for single-loop programs)
 
     @property
     def total_wire_bytes(self) -> float:
@@ -321,6 +330,7 @@ def program_stats(text: str, default_group: int = 256) -> ProgramStats:
     comps = parse_module(text)
     mult, hbm_level = execution_multipliers(comps)
     st = ProgramStats()
+    st.loop_trip_max = float(max(mult.values(), default=1))
     for cname, comp in comps.items():
         m = mult.get(cname, 1)
         is_hbm = cname in hbm_level
@@ -400,8 +410,10 @@ def _instr_hbm_bytes(ins: Instr, comp: Computation,
         fb = _fusion_operand_bytes(ins, comp, comps)
         if fb is not None:
             return res + fb
-    if ins.op == "while":
-        # carry ping-pong is aliased in place; don't charge the tuple
+    if ins.op in ("while", "call", "conditional"):
+        # bodies are HBM-level computations counted on their own; charging
+        # the call site too would double-count every shard_map body
+        # (while-carry ping-pong is additionally aliased in place)
         return 0.0
     return res + sum(ops)
 

@@ -12,7 +12,18 @@ The paper's runtime, mapped to an SPMD pod:
 * the paper's non-blocking residual reduction becomes the K-stale pipelined
   reduction of ``core.detection`` — the loop predicate reads the global
   residual launched K outer iterations earlier, so the scalar all-reduce
-  overlaps sweep compute instead of fencing it.
+  overlaps sweep compute instead of fencing it;
+* the residual itself is a *by-product of the sweep* (``fuse_residual``,
+  default on): the last inner sweep of each outer iteration returns its
+  local contribution fused, so one outer iteration performs exactly one
+  ghost assembly + one grid pass — no residual-only second pass.  The
+  contribution therefore measures the state *before* that sweep with
+  *pre-exchange* ghosts (one sweep + one exchange staler than the seed's
+  post-exchange evaluation) — precisely the kind of staleness the paper's
+  protocol-free detection absorbs; NFAIS2's exact verification still
+  recomputes a fresh post-exchange residual under its ``lax.cond``.
+  ``fuse_residual=False`` restores the unfused two-pass baseline (used by
+  benchmarks/bench_fused.py for the head-to-head).
 
 ``solve_sharded``/``make_sharded_solver`` build the shard_map program;
 ``solve_single`` is the 1-device reference used by tests.
@@ -31,6 +42,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import detection
 from repro.core import residual as res
+from repro.core.compat import axis_size_compat, shard_map_compat as _shard_map
 from repro.solvers import gauss_seidel, jacobi
 from repro.solvers.convdiff import Stencil
 
@@ -50,6 +62,7 @@ class SolverConfig:
     max_outer: int = 10_000
     sweep: str = "hybrid"        # "hybrid" (RB-GS interior) | "jacobi"
     use_kernel: bool = False     # dispatch sweeps to the Pallas jacobi3d kernel
+    fuse_residual: bool = True   # residual as sweep by-product (no 2nd pass)
 
 
 # ---------------------------------------------------------------------------
@@ -104,23 +117,63 @@ def _zero_ghosts(x: jax.Array):
 # ---------------------------------------------------------------------------
 
 
-def _sweep_block(cfg: SolverConfig, g: jax.Array, b: jax.Array, ox, oy) -> jax.Array:
+def _sweep_block(cfg: SolverConfig, x: jax.Array, ghosts, b: jax.Array, ox, oy) -> jax.Array:
+    """One sweep, contribution discarded (inner sweeps that don't feed
+    detection — the fused partials are dead code XLA eliminates)."""
     if cfg.use_kernel:
         from repro.kernels.jacobi3d import ops as jac_ops
 
-        return jac_ops.sweep(cfg.stencil, g, b, sweep=cfg.sweep, ox=ox, oy=oy)
+        return jac_ops.sweep(cfg.stencil, x, ghosts, b, sweep=cfg.sweep,
+                             ox=ox, oy=oy)
+    g = ghosted(x, ghosts)
     if cfg.sweep == "jacobi":
         return jacobi.jacobi_sweep(cfg.stencil, g, b)
     return gauss_seidel.redblack_gs_sweep(cfg.stencil, g, b, ox, oy)
 
 
+def _sweep_with_contribution(cfg: SolverConfig, x: jax.Array, ghosts,
+                             b: jax.Array, ox, oy):
+    """The fused hot path: ``(new_x, contrib)`` from one ghost assembly and
+    one grid pass.  ``contrib`` is the pre-σ residual contribution of the
+    *input* state (see module docstring for the staleness semantics)."""
+    if cfg.use_kernel:
+        from repro.kernels.jacobi3d import ops as jac_ops
+
+        return jac_ops.sweep_with_contribution(
+            cfg.stencil, x, ghosts, b, sweep=cfg.sweep, ox=ox, oy=oy,
+            ord=cfg.monitor.ord)
+    g = ghosted(x, ghosts)
+    if cfg.sweep == "jacobi":
+        new, r = jacobi.jacobi_sweep_residual(cfg.stencil, g, b)
+    else:
+        new, r = gauss_seidel.redblack_gs_sweep_residual(cfg.stencil, g, b, ox, oy)
+    return new, res.local_contribution(r, cfg.monitor.ord)
+
+
 def _local_contribution(cfg: SolverConfig, g: jax.Array, b: jax.Array) -> jax.Array:
+    """Residual-only pass (unfused baseline + NFAIS2 exact verification)."""
     if cfg.use_kernel:
         from repro.kernels.jacobi3d import ops as jac_ops
 
         return jac_ops.residual_contribution(cfg.stencil, g, b, ord=cfg.monitor.ord)
     r = jacobi.residual_block(cfg.stencil, g, b)
     return res.local_contribution(r, cfg.monitor.ord)
+
+
+def _outer_iteration(cfg: SolverConfig, x, ghosts, b, ox, oy):
+    """Shared outer-iteration kernel for both drivers: ``inner_sweeps``
+    sweeps, the last one fused with the detection contribution, then a
+    residual-only pass only when ``fuse_residual`` is off."""
+    if cfg.fuse_residual:
+        for s in range(cfg.inner_sweeps - 1):
+            x = _sweep_block(cfg, x, ghosts, b, ox, oy)
+        x, contrib = _sweep_with_contribution(cfg, x, ghosts, b, ox, oy)
+        return x, contrib
+    for _ in range(cfg.inner_sweeps):
+        x = _sweep_block(cfg, x, ghosts, b, ox, oy)
+    return x, None
+
+
 
 
 # ---------------------------------------------------------------------------
@@ -146,11 +199,19 @@ def make_sharded_solver(cfg: SolverConfig, mesh: Mesh, ax_x: str = "data", ax_y:
             bx, by, _ = x.shape
             ox = _linear_index(ax_x_t) * bx
             oy = _linear_index(ax_y_t) * by
-            for _ in range(cfg.inner_sweeps):
-                x = _sweep_block(cfg, ghosted(x, ghosts), b, ox, oy)
+            x, contrib = _outer_iteration(cfg, x, ghosts, b, ox, oy)
             ghosts = halo_exchange(x, ax_x_t, ax_y_t, nx, ny)
-            contrib = _local_contribution(cfg, ghosted(x, ghosts), b)
-            exact_fn = lambda: res.psum_sigma(contrib, axis_names, mon_cfg.ord)
+            if contrib is None:  # unfused baseline: post-exchange second pass
+                contrib = _local_contribution(cfg, ghosted(x, ghosts), b)
+                exact_fn = lambda: res.psum_sigma(contrib, axis_names,
+                                                  mon_cfg.ord)
+            else:
+                # fused contrib is one sweep stale; NFAIS2's exact
+                # verification must measure the fresh post-exchange state
+                # (paid lazily under its lax.cond).
+                exact_fn = lambda: res.psum_sigma(
+                    _local_contribution(cfg, ghosted(x, ghosts), b),
+                    axis_names, mon_cfg.ord)
             mon = detection.step(mon_cfg, mon, contrib, axis_names=axis_names,
                                  exact_residual_fn=exact_fn)
             return x, ghosts, mon, k + 1
@@ -169,21 +230,19 @@ def make_sharded_solver(cfg: SolverConfig, mesh: Mesh, ax_x: str = "data", ax_y:
         )
 
     spec = P(ax_x, ax_y, None)
-    sharded = jax.shard_map(
+    return _shard_map(
         local_solve,
         mesh=mesh,
         in_specs=(spec, spec),
         out_specs=SolveResult(x=spec, residual=P(), outer_iters=P(), converged=P()),
-        check_vma=False,
     )
-    return sharded
 
 
 def _linear_index(axis_names: Tuple[str, ...]):
     """Linear rank along possibly-composite mesh axes."""
     idx = jnp.zeros((), jnp.int32)
     for a in axis_names:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size_compat(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -200,11 +259,14 @@ def solve_single(cfg: SolverConfig, b: jax.Array, x0: Optional[jax.Array] = None
 
     def body_fn(state):
         x, mon, k = state
-        for _ in range(cfg.inner_sweeps):
-            x = _sweep_block(cfg, ghosted(x, _zero_ghosts(x)), b, 0, 0)
-        g = ghosted(x, _zero_ghosts(x))
-        contrib = _local_contribution(cfg, g, b)
-        exact_fn = lambda: res.sigma(contrib, mon_cfg.ord)
+        x, contrib = _outer_iteration(cfg, x, _zero_ghosts(x), b, 0, 0)
+        if contrib is None:  # unfused baseline: residual-only second pass
+            contrib = _local_contribution(cfg, ghosted(x, _zero_ghosts(x)), b)
+            exact_fn = lambda: res.sigma(contrib, mon_cfg.ord)
+        else:
+            exact_fn = lambda: res.sigma(
+                _local_contribution(cfg, ghosted(x, _zero_ghosts(x)), b),
+                mon_cfg.ord)
         mon = detection.step(mon_cfg, mon, contrib, axis_names=None,
                              exact_residual_fn=exact_fn)
         return x, mon, k + 1

@@ -23,10 +23,39 @@ def redblack_gs_sweep(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, ox, oy) -> jn
     """One red-black GS sweep on a ghosted block; returns the new interior.
 
     ``ox, oy`` are global offsets (static ints or traced scalars) aligning
-    the checkerboard across subdomains."""
+    the checkerboard across subdomains.  (The unused residual below is dead
+    code XLA eliminates — sweep-only callers pay nothing for the fusion.)"""
+    new, _ = redblack_gs_sweep_residual(st, g, b, ox, oy)
+    return new
+
+
+def redblack_gs_sweep_residual(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, ox, oy):
+    """Fused hybrid sweep + pre-sweep residual.
+
+    The first color's off-diagonal apply doubles as the residual term, so
+    the detection layer's residual is a by-product of the relaxation instead
+    of a second pass: returns ``(new_interior, r)`` with ``r = b − A x_in``
+    (residual of the *input* state — one sweep staler than a post-sweep
+    evaluation, which the asynchronous detection layer tolerates by design).
+    """
     parity = parity_mask(b.shape, ox, oy)
-    for color in (0, 1):
-        new = (b - offdiag_apply(st, g)) / st.diag
-        inner = g[1:-1, 1:-1, 1:-1]
-        g = g.at[1:-1, 1:-1, 1:-1].set(jnp.where(parity == color, new, inner))
-    return g[1:-1, 1:-1, 1:-1]
+    inner = g[1:-1, 1:-1, 1:-1]
+    off0 = offdiag_apply(st, g)
+    r = b - (st.diag * inner + off0)
+    # color 0 (even parity): Jacobi update against the frozen view
+    upd0 = jnp.where(parity == 0, (b - off0) / st.diag, inner)
+    # Rebuild the ghosted block instead of updating g in place: an in-place
+    # dynamic-update-slice would force XLA to copy g (it is still live for
+    # the residual), and only the 6 ghost faces are ever read again —
+    # corners/edges are dead.
+    g2 = jnp.zeros_like(g)
+    g2 = g2.at[1:-1, 1:-1, 1:-1].set(upd0)
+    g2 = g2.at[0, 1:-1, 1:-1].set(g[0, 1:-1, 1:-1])
+    g2 = g2.at[-1, 1:-1, 1:-1].set(g[-1, 1:-1, 1:-1])
+    g2 = g2.at[1:-1, 0, 1:-1].set(g[1:-1, 0, 1:-1])
+    g2 = g2.at[1:-1, -1, 1:-1].set(g[1:-1, -1, 1:-1])
+    g2 = g2.at[1:-1, 1:-1, 0].set(g[1:-1, 1:-1, 0])
+    g2 = g2.at[1:-1, 1:-1, -1].set(g[1:-1, 1:-1, -1])
+    # color 1 (odd): sees same-sweep color-0 values + frozen ghosts
+    new1 = (b - offdiag_apply(st, g2)) / st.diag
+    return jnp.where(parity == 1, new1, upd0), r

@@ -27,6 +27,17 @@ def jacobi_sweep(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, omega: float = 1.0
     return (1.0 - omega) * g[1:-1, 1:-1, 1:-1] + omega * new
 
 
+def jacobi_sweep_residual(st: Stencil, g: jnp.ndarray, b: jnp.ndarray):
+    """Fused sweep + pre-sweep residual, sharing the off-diagonal apply.
+
+    Returns ``(new_interior, r)`` with ``r = b − A x_in`` — the residual of
+    the *input* state, the free by-product of the relaxation (equivalently
+    ``diag · (new − x_in)``)."""
+    off = offdiag_apply(st, g)
+    r = b - (st.diag * g[1:-1, 1:-1, 1:-1] + off)
+    return (b - off) / st.diag, r
+
+
 def residual_block(st: Stencil, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """b − A x over the rows owned by the ghosted block."""
     return b - (st.diag * g[1:-1, 1:-1, 1:-1] + offdiag_apply(st, g))

@@ -1,9 +1,32 @@
-"""Engine semantics + hypothesis properties of the asynchronous model (2)."""
+"""Engine semantics + hypothesis properties of the asynchronous model (2).
+
+Runs without the optional ``hypothesis`` dep: the property tests then
+degrade to a fixed set of seeded-random cases instead of being skipped.
+"""
 import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to seeded-random cases
+    HAVE_HYPOTHESIS = False
+
+
+def given_seed(max_examples, fallback_seeds):
+    """``@given(seed=...)`` with hypothesis, parametrized seeds without."""
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(seed=st.integers(0, 10_000))(fn)
+            )
+    else:
+        def deco(fn):
+            return pytest.mark.parametrize("seed", fallback_seeds)(fn)
+    return deco
 
 from repro.core.async_engine import AsyncEngine, DelayModel, EngineConfig, Msg
 from repro.core.protocols import PFAIT
@@ -21,8 +44,7 @@ def _cfg(seed, fifo=False, het=0.3):
     )
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 10_000))
+@given_seed(max_examples=10, fallback_seeds=(0, 17, 424, 3133, 9041))
 def test_termination_under_random_delays(seed):
     prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=seed % 7)
     eng = AsyncEngine(prob, _cfg(seed), PFAIT(1e-5, ord=prob.ord))
@@ -31,8 +53,7 @@ def test_termination_under_random_delays(seed):
     assert r.r_star < 1e-3  # margin holds loosely even with wild delays
 
 
-@settings(max_examples=8, deadline=None)
-@given(seed=st.integers(0, 10_000))
+@given_seed(max_examples=8, fallback_seeds=(1, 23, 512, 7713))
 def test_fifo_channels_deliver_in_order(seed):
     """Property: with fifo=True, per-channel delivery order == send order."""
     prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=1)
@@ -77,6 +98,18 @@ def test_non_fifo_can_reorder():
             reordered += 1
         per_chan[k] = max(per_chan.get(k, -1.0), ts)
     assert reordered > 0  # heavy-tailed delays overtake
+
+
+def test_exhausted_max_iters_returns_undetected_instead_of_hanging():
+    """With an unreachable ε and all workers at max_iters, the engine must
+    return (terminated=False) — PFAIT's reduction relaunch loop previously
+    spun forever on the frozen state."""
+    prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=0)
+    cfg = dataclasses.replace(_cfg(0), max_iters=30)
+    r = AsyncEngine(prob, cfg, PFAIT(1e-15, ord=prob.ord)).run()
+    assert not r.terminated
+    assert r.k_max == 30
+    assert np.isfinite(r.r_star)
 
 
 def test_heterogeneous_progress():

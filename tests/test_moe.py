@@ -75,13 +75,13 @@ def test_shard_map_moe_matches_local_reference_single_device():
     key = jax.random.PRNGKey(0)
     weights = moe_init(key, plan, gated=True, dtype=jnp.float32)
     x = jax.random.normal(jax.random.fold_in(key, 7), (2, 8, cfg.d_model))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh_compat
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     y_ref, aux_ref = moe_local_reference(x, weights, plan, gated=True)
-    with jax.set_mesh(mesh):
-        y_sm, aux_sm = jax.jit(
-            lambda xx, ww: moe_mod.moe_apply(xx, ww, plan, True, mesh, dp_axes=("data",))
-        )(x, weights)
+    y_sm, aux_sm = jax.jit(
+        lambda xx, ww: moe_mod.moe_apply(xx, ww, plan, True, mesh, dp_axes=("data",))
+    )(x, weights)
     np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_ref), atol=1e-5)
     np.testing.assert_allclose(float(aux_sm), float(aux_ref), rtol=1e-5)
 
@@ -92,8 +92,9 @@ def test_moe_is_differentiable_through_dispatch():
     key = jax.random.PRNGKey(0)
     weights = moe_init(key, plan, gated=True, dtype=jnp.float32)
     x = jax.random.normal(jax.random.fold_in(key, 9), (1, 8, cfg.d_model))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh_compat
+
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
 
     def loss(w):
         y, aux = moe_mod.moe_apply(x, w, plan, True, mesh, dp_axes=("data",))

@@ -78,17 +78,17 @@ def test_hybrid_gs_converges_faster_than_jacobi():
 
 
 def test_sharded_solver_single_device_mesh_matches_single():
+    from repro.launch.mesh import compat_make_mesh
+
     n = 12
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.9)
     b = jnp.asarray(make_rhs(n, 0))
     mon = detection.for_mode("pfait", eps_tilde=1e-8, margin=10.0,
                              staleness=2, ord=float("inf"))
     cfg = SolverConfig(stencil=st, monitor=mon, inner_sweeps=2, max_outer=20_000)
-    solve = make_sharded_solver(cfg, mesh)
-    with jax.set_mesh(mesh):
-        r_mesh = solve(jnp.zeros_like(b), b)
+    solve = make_sharded_solver(cfg, mesh)  # mesh passed explicitly
+    r_mesh = solve(jnp.zeros_like(b), b)
     r_single = solve_single(cfg, b)
     assert bool(r_mesh.converged)
     np.testing.assert_allclose(np.asarray(r_mesh.x), np.asarray(r_single.x), atol=1e-12)
