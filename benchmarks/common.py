@@ -21,6 +21,19 @@ from repro.solvers.convdiff import ConvDiffProblem
 SEEDS = (0, 1, 2, 3)
 
 
+def make_problem(family: str, seed: int = 0, **kw):
+    """Problem-family factory shared by the table and reliability runners."""
+    if family == "convdiff":
+        return ConvDiffProblem(n=kw.get("n", 12), p=kw.get("p", 4),
+                               rho=kw.get("rho", 0.9), seed=seed)
+    if family == "pagerank":
+        from repro.solvers.pagerank import PageRankProblem
+
+        return PageRankProblem(n=kw.get("n", 256), p=kw.get("p", 4),
+                               damping=kw.get("damping", 0.85), seed=seed)
+    raise KeyError(family)
+
+
 def make_protocol(name: str, eps: float, ord_: float, m: int = 4):
     if name == "pfait":
         return PFAIT(eps, ord=ord_)

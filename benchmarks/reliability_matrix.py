@@ -1,0 +1,230 @@
+"""Reliability matrix: protocols × problems × adversarial scenarios.
+
+For every cell of {PFAIT, NFAIS2, NFAIS5, ExactSnapshotFIFO} ×
+{convdiff, pagerank} × standard_scenarios(), run seeded traced engine runs
+and score each with the false/late-detection oracle
+(core/reliability.py).  Reported per cell:
+
+* ``false_rate``        — fraction of runs where the protocol claimed
+                          r < ε while the true residual at the detection
+                          instant exceeded 10ε (a decade — beyond any
+                          reasonable margin policy),
+* ``undetected_rate``   — runs that exhausted max_iters without detection
+                          (the engine's no-hang grace path),
+* ``latency_overhead``  — mean t_detect − t_first(r_true ≤ ε): the cost of
+                          detection beyond the numerics,
+* ``protocol_bytes``    — mean non-data message bytes (protocol overhead),
+* platform health from the sweep trace (fault_tolerance wiring).
+
+``ExactSnapshotFIFO`` cells under lossy scenarios are reported as
+``precondition_violated`` instead of run: Chandy–Lamport markers require
+reliable FIFO channels, and a lost marker is a protocol misuse, not a
+detection failure.
+
+The acceptance invariants of the lab are checked at the end (and the
+process exits non-zero when violated):
+  * at least one scenario where PFAIT false-detects,
+  * zero false detections across all NFAIS2/ExactSnapshotFIFO cells.
+
+Run:   PYTHONPATH=src:. python benchmarks/reliability_matrix.py
+Smoke: PYTHONPATH=src:. python benchmarks/reliability_matrix.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.async_engine import PLATFORMS
+from repro.core.reliability import (
+    detection_report,
+    platform_health,
+    run_traced,
+)
+from repro.core.scenarios import standard_scenarios
+from benchmarks.common import make_problem, make_protocol
+
+COMPUTE_BASE = 1e-3
+FACTOR = 10.0           # oracle disagreement factor (one decade)
+
+PROBLEMS = {
+    # family -> (factory kwargs, eps, max_iters)
+    "convdiff": ({"n": 12, "p": 4, "rho": 0.9}, 1e-6, 4000),
+    "pagerank": ({"n": 256, "p": 4}, 1e-8, 3000),
+}
+PROTOCOLS = ("pfait", "nfais2", "nfais5", "exact")
+EXACT_SNAPSHOT_PROTOCOLS = ("nfais2", "exact")  # consistent-cut residuals
+
+
+def run_matrix_cell(family: str, protocol: str, spec, seeds,
+                    residual_stride: int = 25) -> Dict:
+    kw, eps, max_iters = PROBLEMS[family]
+    cell = {
+        "problem": family, "protocol": protocol, "scenario": spec.name,
+        "platform": spec.platform, "eps": eps, "seeds": list(seeds),
+        "scenario_spec": spec.scenario.describe(),
+    }
+    if protocol == "exact" and spec.lossy:
+        cell["status"] = "precondition_violated"
+        cell["reason"] = ("Chandy-Lamport markers require lossless FIFO "
+                          "channels; scenario drops messages")
+        return cell
+    runs: List[Dict] = []
+    healths = []
+    for seed in seeds:
+        cfg = dataclasses.replace(
+            PLATFORMS[spec.platform](COMPUTE_BASE),
+            seed=seed, max_iters=max_iters,
+            fifo=(protocol == "exact"), scenario=spec.scenario,
+        )
+        res, rec = run_traced(
+            lambda: make_problem(family, seed=seed, **kw),
+            cfg,
+            lambda pr: make_protocol(protocol, eps, pr.ord),
+            residual_stride=residual_stride,
+        )
+        rep = detection_report(rec, eps, factor=FACTOR)
+        healths.append(platform_health(rec, kw["p"], COMPUTE_BASE))
+        proto_bytes = sum(v for k, v in res.msg_bytes.items() if k != "data")
+        runs.append({
+            "seed": seed,
+            "terminated": res.terminated,
+            "detected_residual": rep.detected_residual,
+            "true_at_detect": rep.true_at_detect,
+            "overshoot": rep.overshoot,
+            "false_detection": rep.false_detection,
+            "latency_overhead": rep.latency_overhead,
+            "wtime": res.wtime,
+            "k_max": res.k_max,
+            "protocol_bytes": proto_bytes,
+            "msg_dropped": res.msg_dropped,
+            "r_star": res.r_star,
+        })
+    det = [r for r in runs if r["terminated"]]
+    lat = [r["latency_overhead"] for r in det
+           if r["latency_overhead"] is not None]
+    # aggregate platform health over all seeds: a fault flagged in any run
+    # characterises the scenario
+    health = {
+        "silent_workers": sorted({w for h in healths for w in h.silent_workers}),
+        "stragglers": sorted({w for h in healths for w in h.stragglers}),
+        "max_silence": max(h.max_silence for h in healths),
+    }
+    cell.update({
+        "status": "ok",
+        "runs": runs,
+        "false_rate": float(np.mean([r["false_detection"] for r in runs])),
+        "undetected_rate": float(np.mean([not r["terminated"] for r in runs])),
+        "mean_overshoot_detected": (
+            float(np.mean([r["overshoot"] for r in det])) if det else None),
+        "mean_latency_overhead": float(np.mean(lat)) if lat else None,
+        "mean_protocol_bytes": float(np.mean([r["protocol_bytes"] for r in runs])),
+        "health": health,
+    })
+    return cell
+
+
+def jsonable(obj):
+    """RFC 8259-safe copy: non-finite floats become None (json.dump would
+    otherwise emit the non-standard Infinity/NaN tokens — undetected runs
+    carry detected_residual/overshoot = inf)."""
+    if isinstance(obj, dict):
+        return {k: jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonable(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+def check_acceptance(cells: List[Dict]) -> Dict:
+    """The lab's headline invariants over the emitted matrix."""
+    ok_cells = [c for c in cells if c.get("status") == "ok"]
+    pfait_false = [
+        (c["problem"], c["scenario"]) for c in ok_cells
+        if c["protocol"] == "pfait" and c["false_rate"] > 0.0
+    ]
+    exact_false = [
+        (c["protocol"], c["problem"], c["scenario"]) for c in ok_cells
+        if c["protocol"] in EXACT_SNAPSHOT_PROTOCOLS and c["false_rate"] > 0.0
+    ]
+    return {
+        "pfait_false_detects_somewhere": bool(pfait_false),
+        "pfait_false_cells": pfait_false,
+        "exact_snapshot_false_cells": exact_false,
+        "exact_snapshot_never_false": not exact_false,
+        "ok": bool(pfait_false) and not exact_false,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 scenarios × 2 protocols, 1 seed (CI)")
+    ap.add_argument("--out", default="BENCH_reliability.json")
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args()
+
+    specs = standard_scenarios(COMPUTE_BASE)
+    if args.smoke:
+        scenario_names = ("stable", "blackout")
+        protocols = ("pfait", "nfais2")
+        families = ("convdiff", "pagerank")
+        seeds = (0,)
+    else:
+        scenario_names = tuple(specs)
+        protocols = PROTOCOLS
+        families = tuple(PROBLEMS)
+        seeds = tuple(range(args.seeds))
+
+    cells, t0 = [], time.time()
+    for family in families:
+        for name in scenario_names:
+            for protocol in protocols:
+                t1 = time.time()
+                cell = run_matrix_cell(family, protocol, specs[name], seeds)
+                cell["wall_s"] = time.time() - t1
+                cells.append(cell)
+                if cell["status"] != "ok":
+                    print(f"{family:9s} {name:13s} {protocol:8s} "
+                          f"-- {cell['status']}")
+                    continue
+                print(f"{family:9s} {name:13s} {protocol:8s} "
+                      f"false={cell['false_rate']:.2f} "
+                      f"undet={cell['undetected_rate']:.2f} "
+                      f"over={cell['mean_overshoot_detected'] or float('nan'):9.2e} "
+                      f"lat={(cell['mean_latency_overhead'] if cell['mean_latency_overhead'] is not None else float('nan')):8.4f} "
+                      f"pbytes={cell['mean_protocol_bytes']:9.0f} "
+                      f"({cell['wall_s']:.1f}s)")
+
+    acceptance = check_acceptance(cells)
+    report = {
+        "cells": cells,
+        "acceptance": acceptance,
+        "meta": {
+            "smoke": bool(args.smoke),
+            "factor": FACTOR,
+            "compute_base": COMPUTE_BASE,
+            "problems": {k: {"kw": v[0], "eps": v[1], "max_iters": v[2]}
+                         for k, v in PROBLEMS.items()},
+            "scenarios": {k: specs[k].scenario.describe()
+                          for k in scenario_names},
+            "wall_s": time.time() - t0,
+            "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(jsonable(report), f, indent=1, allow_nan=False)
+    print(f"\nwrote {args.out} ({len(cells)} cells, "
+          f"{report['meta']['wall_s']:.0f}s)")
+    print(f"acceptance: {acceptance}")
+    if not acceptance["ok"]:
+        raise SystemExit("reliability acceptance invariants violated")
+
+
+if __name__ == "__main__":
+    main()

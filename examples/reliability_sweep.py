@@ -1,0 +1,71 @@
+"""Reliability-lab quickstart: when does a detected residual lie?
+
+Sweeps a handful of adversarial platform scenarios over PFAIT (the paper's
+protocol-free detection) and NFAIS2 (data-carrying snapshots) on both
+problem families, scoring every run with the false/late-detection oracle.
+The punchline reproduces the paper's reliability claim *and* its limits:
+
+  * on stable/unstable/bursty platforms PFAIT's claim holds (overshoot
+    within the ε-margin the paper calibrates),
+  * under an interface blackout PFAIT confidently reports convergence
+    while the true residual is orders of magnitude above ε — a false
+    detection — whereas NFAIS2 refuses to fire.
+
+Runs in well under 30 s.
+
+Run:  PYTHONPATH=src python examples/reliability_sweep.py
+"""
+import dataclasses
+
+from repro.core.async_engine import PLATFORMS
+from repro.core.protocols import NFAIS2, PFAIT
+from repro.core.reliability import detection_report, platform_health, run_traced
+from repro.core.scenarios import standard_scenarios
+from repro.solvers.convdiff import ConvDiffProblem
+from repro.solvers.pagerank import PageRankProblem
+
+BASE = 1e-3
+SCENARIOS = ("stable", "burst", "straggler", "pause_resume", "blackout")
+PROBLEMS = {
+    "convdiff": (lambda seed: ConvDiffProblem(n=12, p=4, rho=0.9, seed=seed),
+                 1e-6),
+    "pagerank": (lambda seed: PageRankProblem(n=128, p=4, seed=seed), 1e-8),
+}
+
+
+def main() -> None:
+    specs = standard_scenarios(BASE)
+    print(f"{'problem':9s} {'scenario':13s} {'protocol':8s} {'verdict':11s} "
+          f"{'detected':>10s} {'true@detect':>11s} {'overshoot':>9s}")
+    for pname, (mk, eps) in PROBLEMS.items():
+        for sname in SCENARIOS:
+            spec = specs[sname]
+            for proto_name, proto_mk in (
+                ("pfait", lambda pr: PFAIT(eps, ord=pr.ord)),
+                ("nfais2", lambda pr: NFAIS2(eps, ord=pr.ord)),
+            ):
+                cfg = dataclasses.replace(
+                    PLATFORMS[spec.platform](BASE), seed=0, max_iters=1500,
+                    scenario=spec.scenario,
+                )
+                res, rec = run_traced(lambda: mk(0), cfg, proto_mk,
+                                      residual_stride=25)
+                rep = detection_report(rec, eps)
+                verdict = ("FALSE-DETECT" if rep.false_detection
+                           else "ok" if res.terminated else "undetected")
+                print(f"{pname:9s} {sname:13s} {proto_name:8s} {verdict:11s} "
+                      f"{rep.detected_residual:10.2e} "
+                      f"{rep.true_at_detect:11.2e} {rep.overshoot:9.1f}")
+            health = platform_health(rec, mk(0).p, BASE)
+            if health.silent_workers or health.stragglers:
+                print(f"{'':9s} {sname:13s} platform-health: "
+                      f"silent={health.silent_workers} "
+                      f"stragglers={health.stragglers}")
+
+    print("\nPFAIT lies exactly where the platform starves its reductions of"
+          "\nfresh interface data; the snapshot protocol goes silent instead."
+          "\nFull matrix: PYTHONPATH=src:. python benchmarks/reliability_matrix.py")
+
+
+if __name__ == "__main__":
+    main()

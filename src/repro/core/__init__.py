@@ -6,6 +6,8 @@
 * ``protocols``     — faithful event-level protocols (PFAIT, NFAIS2, NFAIS5,
                       Chandy–Lamport exact snapshot)
 * ``termination``   — ε-threshold calibration methodology (paper §4.2)
+* ``scenarios``     — composable adversarial platform effects (reliability lab)
+* ``reliability``   — replay traces + false/late-detection oracle
 """
 from repro.core import residual, termination  # noqa: F401
 from repro.core.detection import MonitorConfig, MonitorState, for_mode, init_state  # noqa: F401

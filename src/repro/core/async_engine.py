@@ -28,6 +28,15 @@ once a worker's record is taken/confirmed.  Protocols receive ``r_i = NaN``
 for iterations they declared unused.  ``fused=False`` restores the exact
 seed behaviour (benchmarks/bench_fused.py measures the head-to-head).
 
+**Reliability lab hooks**: ``EngineConfig.scenario`` attaches a composable
+adversarial-platform scenario (core/scenarios.py) that shapes every sampled
+delay, drops/spikes individual messages, slows workers persistently, or
+pauses them mid-run; ``AsyncEngine(..., recorder=)`` attaches a trace
+recorder (core/reliability.py) observing sweeps, sends/drops, and the
+detection instant — the substrate of the false/late-detection oracle.  Both
+draw from the engine's single RNG stream in event order, so a run remains a
+pure function of ``EngineConfig.seed``.
+
 Measured outputs per run (the paper's reported quantities):
   * ``r_star``  — final exact residual r(x̄) at the instant every process
                   has stopped (Tables 1, 3, 4),
@@ -94,19 +103,61 @@ class DecomposedProblem(TProtocol):
 
 @dataclass(frozen=True)
 class DelayModel:
-    """Lognormal delay: median ``base``, dispersion ``sigma``; plus jitter
-    floor.  Stable single-site platforms (the paper's SGI ICE X) have small
-    sigma; unstable/multi-site ones have large sigma."""
+    """Random delay with scale ``base`` and a jitter floor.
+
+    ``dist`` picks the family:
+      * ``lognormal`` — median ``base``, dispersion ``sigma``.  Stable
+        single-site platforms (the paper's SGI ICE X) have small sigma;
+        unstable/multi-site ones have large sigma.
+      * ``pareto``    — ``base·(1 + Pareto(shape))``: heavy tail with index
+        ``shape`` (≤ 2 ⇒ infinite variance — grid/WAN-like spikes).
+      * ``fixed``     — deterministic ``base`` (hand-built oracle traces).
+
+    Parameters are validated here, at construction: a bad sigma/shape used
+    to surface only mid-run as a numpy error deep inside
+    ``AsyncEngine.run``.
+    """
 
     base: float
     sigma: float = 0.25
     floor: float = 1e-6
+    dist: str = "lognormal"
+    shape: float = 1.5  # pareto tail index (dist="pareto" only)
+
+    _DISTS = ("lognormal", "pareto", "fixed")
+
+    def __post_init__(self):
+        if not (math.isfinite(self.base) and self.base > 0.0):
+            raise ValueError(f"DelayModel.base={self.base} must be finite > 0")
+        if not (math.isfinite(self.sigma) and self.sigma >= 0.0):
+            raise ValueError(
+                f"DelayModel.sigma={self.sigma} must be finite >= 0")
+        if not (math.isfinite(self.floor) and self.floor >= 0.0):
+            raise ValueError(
+                f"DelayModel.floor={self.floor} must be finite >= 0")
+        if self.dist not in self._DISTS:
+            raise ValueError(
+                f"DelayModel.dist={self.dist!r} not in {self._DISTS}")
+        if self.dist == "pareto" and not (
+                math.isfinite(self.shape) and self.shape > 0.0):
+            raise ValueError(
+                f"DelayModel.shape={self.shape} must be finite > 0")
 
     def sample(self, rng: np.random.Generator, n: Optional[int] = None):
         if n is None:  # scalar fast path — the engine hot loop draws ~4/sweep
-            return max(self.base * rng.lognormal(mean=0.0, sigma=self.sigma),
-                       self.floor)
-        s = self.base * rng.lognormal(mean=0.0, sigma=self.sigma, size=n)
+            if self.dist == "lognormal":
+                s = self.base * rng.lognormal(mean=0.0, sigma=self.sigma)
+            elif self.dist == "pareto":
+                s = self.base * (1.0 + rng.pareto(self.shape))
+            else:  # fixed
+                s = self.base
+            return max(s, self.floor)
+        if self.dist == "lognormal":
+            s = self.base * rng.lognormal(mean=0.0, sigma=self.sigma, size=n)
+        elif self.dist == "pareto":
+            s = self.base * (1.0 + rng.pareto(self.shape, size=n))
+        else:
+            s = np.full(n, self.base)
         return np.maximum(s, self.floor)
 
 
@@ -122,6 +173,8 @@ class EngineConfig:
     seed: int = 0
     fused: bool = True                     # prefer update_with_residual + skip
                                            # residuals the protocol won't read
+    scenario: Optional[Any] = None         # core.scenarios.Scenario — adversarial
+                                           # platform effects (None = plain)
 
 
 # paper-flavoured presets.  Delays are scaled so that interface data and
@@ -147,6 +200,25 @@ def unstable_platform(compute_base: float = 1e-3) -> EngineConfig:
         hop_latency=2 * compute_base,
         het_factor=0.8,
     )
+
+
+def heavy_tail_platform(compute_base: float = 1e-3) -> EngineConfig:
+    """Pareto channel latency (tail index 1.2 ⇒ infinite variance): steady
+    compute, but occasional message delays orders of magnitude above the
+    median — the WAN/grid regime of the reliability lab."""
+    return EngineConfig(
+        compute=DelayModel(compute_base, sigma=0.2),
+        channel=DelayModel(compute_base * 2.0, dist="pareto", shape=1.2),
+        hop_latency=compute_base,
+        het_factor=0.3,
+    )
+
+
+PLATFORMS = {
+    "stable": stable_platform,
+    "unstable": unstable_platform,
+    "heavy_tail": heavy_tail_platform,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +250,7 @@ class RunResult:
     msg_bytes: Dict[str, int]
     reductions: int
     protocol: str
+    msg_dropped: Dict[str, int] = field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -188,10 +261,13 @@ class RunResult:
 class AsyncEngine:
     """Discrete-event simulator of asynchronous iterations + detection."""
 
-    def __init__(self, problem: DecomposedProblem, cfg: EngineConfig, protocol):
+    def __init__(self, problem: DecomposedProblem, cfg: EngineConfig, protocol,
+                 recorder=None):
         self.problem = problem
         self.cfg = cfg
         self.protocol = protocol
+        self.scenario = cfg.scenario       # core.scenarios.Scenario | None
+        self.recorder = recorder           # core.reliability.TraceRecorder | None
         self.rng = np.random.default_rng(cfg.seed)
         p = problem.p
         self.p = p
@@ -217,6 +293,7 @@ class AsyncEngine:
         # accounting
         self.msg_counts: Dict[str, int] = {}
         self.msg_bytes: Dict[str, int] = {}
+        self.msg_dropped: Dict[str, int] = {}
         self.reductions_started = 0
         # termination
         self.detect_time: Optional[float] = None
@@ -229,8 +306,23 @@ class AsyncEngine:
         heapq.heappush(self._heap, (t, next(self._counter), kind, payload))
 
     def send(self, msg: Msg, t: float) -> None:
-        """Send a message over channel (src→dst) honouring FIFO-ness."""
+        """Send a message over channel (src→dst) honouring FIFO-ness.
+
+        With a scenario attached, the sampled delay passes through
+        ``scenario.channel_delay`` — which may inflate it (bursts, tail
+        spikes) or return None to drop the message entirely (lossy
+        channels).  Dropped messages are accounted in ``msg_dropped`` and
+        never delivered."""
         delay = float(self.cfg.channel.sample(self.rng))
+        if self.scenario is not None:
+            shaped = self.scenario.channel_delay(t, msg.kind, delay, self.rng)
+            if shaped is None:
+                msg.send_time = t
+                self.msg_dropped[msg.kind] = self.msg_dropped.get(msg.kind, 0) + 1
+                if self.recorder is not None:
+                    self.recorder.on_send(self, msg, t, None)
+                return
+            delay = float(shaped)
         deliver = t + delay
         if self.cfg.fifo:
             key = (msg.src, msg.dst)
@@ -245,6 +337,8 @@ class AsyncEngine:
                 msg.nbytes = int(np.asarray(p).nbytes) if p is not None else 16
         self.msg_counts[msg.kind] = self.msg_counts.get(msg.kind, 0) + 1
         self.msg_bytes[msg.kind] = self.msg_bytes.get(msg.kind, 0) + msg.nbytes
+        if self.recorder is not None:
+            self.recorder.on_send(self, msg, t, deliver)
         self.schedule(deliver, "deliver", msg)
 
     # -- reduction service ---------------------------------------------------
@@ -259,6 +353,14 @@ class AsyncEngine:
         2·ceil(log2 p)·hop after the last contribution."""
         self.reductions_started += 1
         offsets = self.cfg.channel.sample(self.rng, self.p)
+        if self.scenario is not None:
+            # collectives are lossless-but-slow: scenario effects shape the
+            # staggered sampling offsets (kind="reduce") but never drop them
+            offsets = np.array([
+                shaped if (shaped := self.scenario.channel_delay(
+                    t, "reduce", float(o), self.rng)) is not None else float(o)
+                for o in offsets
+            ])
         sample_times = t + offsets
         contribs = np.full(self.p, np.nan)
         remaining = [self.p]
@@ -284,6 +386,8 @@ class AsyncEngine:
             return
         self.detect_time = t
         self.detected_residual = detected_residual
+        if self.recorder is not None:
+            self.recorder.on_detect(self, t, detected_residual)
         bcast = math.ceil(math.log2(max(self.p, 2))) * self.cfg.hop_latency
         for i in range(self.p):
             self.stop_time[i] = t + bcast + float(self.cfg.channel.sample(self.rng))
@@ -293,6 +397,8 @@ class AsyncEngine:
         cfg = self.cfg
         for i in range(self.p):
             dt = float(cfg.compute.sample(self.rng)) * self.speed[i]
+            if self.scenario is not None:
+                dt = self.scenario.compute_delay(0.0, i, dt, self.rng)
             self.schedule(dt, "compute", i)
         self.protocol.on_start(self, 0.0)
 
@@ -313,6 +419,13 @@ class AsyncEngine:
                 break
             if kind == "compute":
                 i = payload
+                if self.scenario is not None:
+                    resume = self.scenario.paused_until(t, i)
+                    if resume is not None and resume > t:
+                        # mid-run pause: the sweep that would have started
+                        # now is deferred to the resume time
+                        self.schedule(resume, "compute", i)
+                        continue
                 if t > self.stop_time[i] or self.k[i] >= cfg.max_iters:
                     if (self.k[i] >= cfg.max_iters
                             and self._exhaust_deadline is None
@@ -341,8 +454,12 @@ class AsyncEngine:
                             payload=self.problem.interface(i, self.x[i], j)),
                         t,
                     )
+                if self.recorder is not None:
+                    self.recorder.on_sweep(self, t, i)
                 self.protocol.on_iteration(self, i, t, r_i)
                 dt = float(cfg.compute.sample(self.rng)) * self.speed[i]
+                if self.scenario is not None:
+                    dt = self.scenario.compute_delay(t, i, dt, self.rng)
                 self.schedule(t + dt, "compute", i)
             elif kind == "deliver":
                 msg: Msg = payload
@@ -359,7 +476,7 @@ class AsyncEngine:
             float(np.max(self.stop_time)) if self.detect_time is not None else self.now
         )
         r_star = self.problem.exact_residual(self.x)
-        return RunResult(
+        result = RunResult(
             terminated=self.detect_time is not None,
             detect_time=self.detect_time if self.detect_time is not None else float("inf"),
             wtime=wtime,
@@ -371,7 +488,11 @@ class AsyncEngine:
             msg_bytes=dict(self.msg_bytes),
             reductions=self.reductions_started,
             protocol=type(self.protocol).__name__,
+            msg_dropped=dict(self.msg_dropped),
         )
+        if self.recorder is not None:
+            self.recorder.on_finish(self, result)
+        return result
 
     # convenience for protocols
     def live_local_residual(self, i: int) -> float:

@@ -1,0 +1,283 @@
+"""Composable adversarial platform scenarios for the async engine.
+
+The paper's reliability claim (a protocol-free reduction yields a usable
+global residual) is platform-dependent: Zou & Magoulès (arXiv:1907.01201)
+show detection quality degrades with network regime.  This module turns the
+engine's two hand-picked presets (``stable_platform`` / ``unstable_platform``)
+into a *scenario algebra*: small frozen effect objects that transform the
+engine's sampled delays, drop or spike individual messages, slow workers
+persistently, or pause them mid-run — composed into a ``Scenario`` attached
+to ``EngineConfig.scenario``.
+
+Effects see every draw the engine makes and may consume additional draws
+from the engine's single RNG stream, so a run is a pure function of
+``EngineConfig.seed`` — the property the replay trace / false-detection
+oracle in ``core.reliability`` relies on.
+
+Hook contract (all optional, defaults are identity):
+
+* ``channel(t, kind, delay, rng)`` → transformed delay, or ``None`` to drop
+  the message (collective/reduction draws use ``kind="reduce"`` and are
+  never dropped — a tree reduction is modelled as lossless-but-slow);
+* ``compute(t, worker, delay, rng)`` → transformed sweep duration;
+* ``paused_until(t, worker)`` → resume time if the worker is paused at
+  ``t``, else ``None``.
+
+``standard_scenarios()`` is the matrix the reliability lab sweeps:
+benchmarks/reliability_matrix.py runs {PFAIT, NFAIS2, NFAIS5,
+ExactSnapshotFIFO} × {convdiff, pagerank} × these scenarios and scores
+each cell with the oracle.  Scenarios containing a lossy effect violate the
+Chandy–Lamport precondition (reliable channels), so ``ExactSnapshotFIFO``
+cells are reported as ``precondition_violated`` instead of run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Effect algebra
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Effect:
+    """Identity platform effect; subclasses override the hooks they shape."""
+
+    #: effects that may lose messages set this True (CL precondition check)
+    lossy = False
+
+    def channel(self, t: float, kind: str, delay: float,
+                rng: np.random.Generator) -> Optional[float]:
+        return delay
+
+    def compute(self, t: float, worker: int, delay: float,
+                rng: np.random.Generator) -> float:
+        return delay
+
+    def paused_until(self, t: float, worker: int) -> Optional[float]:
+        return None
+
+
+@dataclass(frozen=True)
+class TailSpike(Effect):
+    """Occasional huge per-message latency (non-FIFO channels reorder)."""
+
+    prob: float = 0.1
+    mult: float = 10.0
+    kinds: Optional[Tuple[str, ...]] = None  # None = every message kind
+
+    def __post_init__(self):
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"TailSpike.prob={self.prob} not in [0, 1]")
+        if self.mult < 1.0:
+            raise ValueError(f"TailSpike.mult={self.mult} must be >= 1")
+
+    def channel(self, t, kind, delay, rng):
+        if self.kinds is not None and kind not in self.kinds:
+            return delay
+        return delay * self.mult if rng.random() < self.prob else delay
+
+
+@dataclass(frozen=True)
+class JitterBurst(Effect):
+    """Correlated jitter: periodic windows where *every* channel (including
+    reduction hops' staggered sampling) slows by ``mult`` simultaneously —
+    the cross-channel correlation a per-message lognormal cannot produce."""
+
+    period: float = 0.04
+    duration: float = 0.01
+    mult: float = 25.0
+    phase: float = 0.0
+
+    def __post_init__(self):
+        if self.period <= 0.0:
+            raise ValueError(f"JitterBurst.period={self.period} must be > 0")
+        if not 0.0 < self.duration <= self.period:
+            raise ValueError(
+                f"JitterBurst.duration={self.duration} not in (0, period]")
+        if self.mult < 1.0:
+            raise ValueError(f"JitterBurst.mult={self.mult} must be >= 1")
+
+    def channel(self, t, kind, delay, rng):
+        if ((t - self.phase) % self.period) < self.duration:
+            return delay * self.mult
+        return delay
+
+
+@dataclass(frozen=True)
+class DropMessages(Effect):
+    """Lossy channels: drop matching messages with probability ``prob``
+    from time ``after`` on.  ``prob=1.0, after=t0`` is the *interface
+    blackout* — dependency views freeze, every worker converges to its own
+    frozen-BC subproblem, and protocols that trust live local residuals
+    (PFAIT, NFAIS5) false-detect while data-carrying snapshots (NFAIS2)
+    merely never fire."""
+
+    prob: float = 0.2
+    kinds: Tuple[str, ...] = ("data",)
+    after: float = 0.0
+
+    lossy = True
+
+    def __post_init__(self):
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"DropMessages.prob={self.prob} not in [0, 1]")
+        if self.after < 0.0:
+            raise ValueError(f"DropMessages.after={self.after} must be >= 0")
+
+    def channel(self, t, kind, delay, rng):
+        if kind in self.kinds and t >= self.after and rng.random() < self.prob:
+            return None
+        return delay
+
+
+@dataclass(frozen=True)
+class Straggler(Effect):
+    """Persistently slow workers (the fault_tolerance.StragglerPolicy
+    target): every sweep of the listed workers takes ``factor×`` longer."""
+
+    workers: Tuple[int, ...] = (0,)
+    factor: float = 8.0
+
+    def __post_init__(self):
+        if self.factor < 1.0:
+            raise ValueError(f"Straggler.factor={self.factor} must be >= 1")
+
+    def compute(self, t, worker, delay, rng):
+        return delay * self.factor if worker in self.workers else delay
+
+
+@dataclass(frozen=True)
+class Pause(Effect):
+    """Mid-run worker pause/resume: the worker performs no sweeps during
+    [at, at+duration) (its in-flight messages still deliver).  The
+    HeartbeatMonitor wiring in ``core.reliability`` detects the silence."""
+
+    worker: int = 0
+    at: float = 0.02
+    duration: float = 0.05
+
+    def __post_init__(self):
+        if self.at < 0.0:
+            raise ValueError(f"Pause.at={self.at} must be >= 0")
+        if self.duration <= 0.0:
+            raise ValueError(f"Pause.duration={self.duration} must be > 0")
+
+    def paused_until(self, t, worker):
+        if worker == self.worker and self.at <= t < self.at + self.duration:
+            return self.at + self.duration
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Composition
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """An ordered composition of effects (applied left to right)."""
+
+    name: str = "baseline"
+    effects: Tuple[Effect, ...] = ()
+
+    @property
+    def lossy(self) -> bool:
+        return any(e.lossy for e in self.effects)
+
+    def channel_delay(self, t: float, kind: str, delay: float,
+                      rng: np.random.Generator) -> Optional[float]:
+        for e in self.effects:
+            delay = e.channel(t, kind, delay, rng)
+            if delay is None:
+                return None
+        return delay
+
+    def compute_delay(self, t: float, worker: int, delay: float,
+                      rng: np.random.Generator) -> float:
+        for e in self.effects:
+            delay = e.compute(t, worker, delay, rng)
+        return delay
+
+    def paused_until(self, t: float, worker: int) -> Optional[float]:
+        resume = None
+        for e in self.effects:
+            r = e.paused_until(t, worker)
+            if r is not None:
+                resume = r if resume is None else max(resume, r)
+        return resume
+
+    def describe(self) -> Dict:
+        return {
+            "name": self.name,
+            "lossy": self.lossy,
+            "effects": [
+                {"kind": type(e).__name__, **dataclasses.asdict(e)}
+                for e in self.effects
+            ],
+        }
+
+
+# ---------------------------------------------------------------------------
+# The reliability-lab scenario matrix
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """A scenario plus the platform preset it runs on (``platform`` is a
+    key into ``core.async_engine`` preset factories: stable | unstable |
+    heavy_tail)."""
+
+    name: str
+    platform: str
+    scenario: Scenario
+
+    @property
+    def lossy(self) -> bool:
+        return self.scenario.lossy
+
+
+def standard_scenarios(base: float = 1e-3) -> Dict[str, ScenarioSpec]:
+    """The ~8-regime sweep of the reliability matrix.  ``base`` is the
+    platform compute_base; every time constant scales with it so the
+    scenarios stress the same *relative* regimes at any simulation scale."""
+
+    def spec(name, platform, *effects):
+        return ScenarioSpec(name, platform, Scenario(name, tuple(effects)))
+
+    return {
+        # the paper's own two regimes, as baselines for the oracle
+        "stable": spec("stable", "stable"),
+        "unstable": spec("unstable", "unstable"),
+        # heavy-tailed channel latency (Pareto tail index 1.2: occasional
+        # delays orders of magnitude above the median)
+        "heavy_tail": spec("heavy_tail", "heavy_tail"),
+        # correlated jitter bursts: all channels ×30 for a quarter of
+        # every 40-sweep window
+        "burst": spec("burst", "stable",
+                      JitterBurst(period=40 * base, duration=10 * base,
+                                  mult=30.0)),
+        # lossy + reordering channels (CL precondition violated)
+        "drop_reorder": spec("drop_reorder", "stable",
+                             DropMessages(prob=0.25, kinds=("data",)),
+                             TailSpike(prob=0.15, mult=12.0,
+                                       kinds=("data",))),
+        # one worker persistently 10× slower
+        "straggler": spec("straggler", "stable",
+                          Straggler(workers=(0,), factor=10.0)),
+        # mid-run pause/resume of one worker
+        "pause_resume": spec("pause_resume", "stable",
+                             Pause(worker=1, at=50 * base,
+                                   duration=200 * base)),
+        # interface blackout: data messages stop entirely after 30 sweeps'
+        # worth of time — the constructed PFAIT false-detection regime
+        "blackout": spec("blackout", "stable",
+                         DropMessages(prob=1.0, kinds=("data",),
+                                      after=30 * base)),
+    }

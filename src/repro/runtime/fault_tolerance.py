@@ -74,6 +74,54 @@ class StragglerPolicy:
 
 
 @dataclass(frozen=True)
+class PlatformHealth:
+    """Post-hoc platform diagnosis from an engine sweep trace (the
+    reliability lab's wiring of the runtime policies into the simulator):
+    workers that went silent past the heartbeat timeout (scenario pauses /
+    crashes) and workers flagged as persistent stragglers."""
+
+    silent_workers: Tuple[int, ...]
+    stragglers: Tuple[int, ...]
+    max_silence: float            # longest inter-sweep gap observed (any worker)
+
+
+def health_from_sweeps(
+    sweeps: Sequence[Tuple[float, int]],
+    p: int,
+    timeout: float,
+    straggler_factor: float = 3.0,
+    straggler_persistence: int = 3,
+    check_every: int = 64,
+) -> PlatformHealth:
+    """Replay ``(t, worker)`` sweep events through HeartbeatMonitor +
+    StragglerPolicy, exactly as a production control loop would consume
+    live heartbeats — but offline, against a recorded trace."""
+    hb = HeartbeatMonitor(timeout=timeout)
+    sp = StragglerPolicy(factor=straggler_factor,
+                         persistence=straggler_persistence)
+    for w in range(p):
+        hb.beat(w, 0.0)
+    last = {w: 0.0 for w in range(p)}
+    silent, straggle = set(), set()
+    max_gap = 0.0
+    for idx, (t, w) in enumerate(sweeps):
+        gap = t - last[w]
+        max_gap = max(max_gap, gap)
+        sp.record(w, gap)
+        silent.update(hb.failed(t))
+        hb.beat(w, t)
+        last[w] = t
+        if idx % check_every == check_every - 1:
+            straggle.update(sp.check())
+    straggle.update(sp.check())
+    return PlatformHealth(
+        silent_workers=tuple(sorted(silent)),
+        stragglers=tuple(sorted(straggle)),
+        max_silence=float(max_gap),
+    )
+
+
+@dataclass(frozen=True)
 class RestartPlan:
     checkpoint_step: int
     surviving_workers: Tuple[int, ...]

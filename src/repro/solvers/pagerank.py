@@ -1,0 +1,185 @@
+"""Sparse PageRank / D-iteration fixed point as a second problem family.
+
+The conv-diff substrate (solvers/convdiff.py) has a *symmetric* 4-neighbour
+dependency structure — every worker talks to every neighbour in both
+directions with equal-size interfaces.  Detection reliability is easier
+there than the general asynchronous-iterations setting (Hong's D-iteration
+work, arXiv:1202.3108): web-graph fixed points have hub-skewed, *directed*
+dependencies, so some workers feed many others while consuming almost
+nothing, and interface sizes differ per direction.
+
+This module implements
+
+    x = d · P x + (1 − d)/n · 1,        0 < d < 1,  P column-stochastic,
+
+decomposed over ``p`` contiguous node blocks, as a
+``core.async_engine.DecomposedProblem``.  The random graph is hub-biased
+(Zipf-weighted targets), so the block dependency graph is genuinely
+asymmetric: ``interface(i, x_i, j)`` returns exactly the components of
+block i that block j's rows reference — possibly the empty array when j
+never reads from i (the engine still exchanges messages both ways, as a
+real sparse solver's symmetrised communicator would).
+
+The iteration contracts in l1 with factor d per sweep (column-stochastic
+P), so the natural residual order is ``ord=1``; contributions follow the
+repo convention (core/residual.py): Σ|r|^l pre-reduction for finite l,
+max|r| for l=∞.  The fused ``update_with_residual`` extension is free
+here: the D-iteration residual *is* the update difference f(x) − x.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+class PageRankProblem:
+    """Damped PageRank over a random hub-biased directed graph."""
+
+    def __init__(
+        self,
+        n: int = 256,
+        p: int = 4,
+        damping: float = 0.85,
+        avg_deg: float = 6.0,
+        hub_skew: float = 0.8,
+        ord: float = 1.0,
+        seed: int = 0,
+    ):
+        if n % p:
+            raise ValueError(f"n={n} not divisible by p={p}")
+        if not 0.0 < damping < 1.0:
+            raise ValueError(f"damping={damping} must be in (0, 1)")
+        self.n = n
+        self.p = p
+        self.d = float(damping)
+        self.ord = float(ord)
+        self.block = n // p
+        rng = np.random.default_rng(seed)
+
+        # hub-biased directed graph: targets drawn Zipf-weighted toward
+        # low-indexed nodes, so block 0 is everyone's dependency while the
+        # tail blocks are mostly read-only consumers (asymmetry).
+        w = 1.0 / (np.arange(n) + 1.0) ** hub_skew
+        w /= w.sum()
+        cols: List[np.ndarray] = []       # per source node: its out-targets
+        for j in range(n):
+            deg = 1 + int(rng.poisson(max(avg_deg - 1.0, 0.0)))
+            deg = min(deg, n - 1)
+            targets = rng.choice(n, size=deg, replace=False, p=w)
+            targets = targets[targets != j]
+            if targets.size == 0:  # no dangling columns: keep P stochastic
+                targets = np.array([(j + 1) % n])
+            cols.append(np.unique(targets))
+
+        # block-compressed column storage: for each (dst block i, src block
+        # j) the needed source components and the dense compressed operator
+        # W[i][j] : (block, |support(i←j)|), plus the diagonal block A_ii.
+        blk = self.block
+        owner = lambda node: node // blk
+        entries: Dict[tuple, List[tuple]] = {}
+        for j, targets in enumerate(cols):
+            val = 1.0 / targets.size
+            for r in targets:
+                entries.setdefault((owner(r), owner(j)), []).append(
+                    (r % blk, j % blk, val))
+        self._W: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
+        self._supp: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
+        self._A: List[np.ndarray] = [np.zeros((blk, blk)) for _ in range(p)]
+        for (bi, bj), es in entries.items():
+            if bi == bj:
+                for r, c, v in es:
+                    self._A[bi][r, c] += v
+                continue
+            support = np.unique(np.array([c for _, c, _ in es]))
+            pos = {c: k for k, c in enumerate(support)}
+            W = np.zeros((blk, support.size))
+            for r, c, v in es:
+                W[r, pos[c]] += v
+            # support(i←j): which of j's components i reads
+            self._supp[bj].setdefault(bi, support)
+            self._W[bi][bj] = W
+        self._neighbors: List[List[int]] = []
+        for i in range(p):
+            nb = set(self._W[i]) | set(self._supp[i])
+            nb.discard(i)
+            self._neighbors.append(sorted(nb))
+        self.v = (1.0 - self.d) / n  # uniform teleport component
+
+    # -- DecomposedProblem interface ----------------------------------------
+    def neighbors(self, i: int) -> List[int]:
+        return self._neighbors[i]
+
+    def init_local(self, i: int) -> np.ndarray:
+        return np.full(self.block, 1.0 / self.n)
+
+    def _apply(self, i: int, x_i: np.ndarray,
+               deps: Dict[int, np.ndarray]) -> np.ndarray:
+        """f_i(x): d · (row-block of P x) + teleport."""
+        y = self._A[i] @ x_i
+        for j, W in self._W[i].items():
+            dep = deps.get(j)
+            if dep is not None and dep.size:
+                y += W @ dep
+        return self.d * y + self.v
+
+    def update(self, i: int, x_i: np.ndarray,
+               deps: Dict[int, np.ndarray]) -> np.ndarray:
+        return self._apply(i, x_i, deps)
+
+    def update_with_residual(self, i: int, x_i: np.ndarray,
+                             deps: Dict[int, np.ndarray],
+                             need_residual: bool = True):
+        """Fused sweep + residual: the D-iteration residual is exactly the
+        update difference, so fusion costs nothing extra."""
+        x_new = self._apply(i, x_i, deps)
+        if not need_residual:
+            return x_new, None
+        return x_new, self._contribution(x_new - x_i)
+
+    def interface(self, i: int, x_i: np.ndarray, j: int) -> np.ndarray:
+        supp = self._supp[i].get(j)
+        if supp is None:
+            return np.empty(0)  # j never reads from i (asymmetric edge)
+        return x_i[supp].copy()
+
+    def _contribution(self, r: np.ndarray) -> float:
+        if np.isinf(self.ord):
+            return float(np.max(np.abs(r))) if r.size else 0.0
+        return float(np.sum(np.abs(r) ** self.ord))
+
+    def local_residual(self, i: int, x_i: np.ndarray,
+                       deps: Dict[int, np.ndarray]) -> float:
+        return self._contribution(self._apply(i, x_i, deps) - x_i)
+
+    def exact_residual(self, xs: Sequence[np.ndarray]) -> float:
+        deps_full = [
+            {j: xs[j][self._supp[j][i]] for j in self.neighbors(i)
+             if i in self._supp[j]}
+            for i in range(self.p)
+        ]
+        contribs = [self.local_residual(i, xs[i], deps_full[i])
+                    for i in range(self.p)]
+        if np.isinf(self.ord):
+            return float(max(contribs))
+        return float(sum(contribs) ** (1.0 / self.ord))
+
+    # -- helpers -------------------------------------------------------------
+    def assemble(self, xs: Sequence[np.ndarray]) -> np.ndarray:
+        return np.concatenate(list(xs))
+
+    def solve_reference(self, tol: float = 1e-14,
+                        max_iter: int = 10_000) -> np.ndarray:
+        """Synchronous power iteration to high precision (test oracle)."""
+        xs = [self.init_local(i) for i in range(self.p)]
+        for _ in range(max_iter):
+            deps = [
+                {j: self.interface(j, xs[j], i) for j in self.neighbors(i)}
+                for i in range(self.p)
+            ]
+            new = [self._apply(i, xs[i], deps[i]) for i in range(self.p)]
+            delta = max(float(np.max(np.abs(a - b))) for a, b in zip(new, xs))
+            xs = new
+            if delta < tol:
+                break
+        return self.assemble(xs)

@@ -1,0 +1,110 @@
+"""PageRank / D-iteration problem family: decomposition correctness,
+fused-path parity, asymmetric dependency structure, and engine runs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.async_engine import AsyncEngine, stable_platform
+from repro.core.protocols import NFAIS2, NFAIS5, PFAIT, ExactSnapshotFIFO
+from repro.solvers.pagerank import PageRankProblem
+
+
+def _full_deps(prob, xs):
+    return [
+        {j: prob.interface(j, xs[j], i) for j in prob.neighbors(i)}
+        for i in range(prob.p)
+    ]
+
+
+def test_reference_solution_is_fixed_point_and_stochastic():
+    prob = PageRankProblem(n=256, p=4, seed=0)
+    x = prob.solve_reference()
+    assert x.sum() == pytest.approx(1.0, abs=1e-10)  # P column-stochastic
+    assert np.all(x > 0)
+    xs = [x[i * prob.block:(i + 1) * prob.block] for i in range(prob.p)]
+    assert prob.exact_residual(xs) < 1e-12
+
+
+def test_update_contracts_in_l1():
+    prob = PageRankProblem(n=256, p=4, damping=0.85, seed=1)
+    rng = np.random.default_rng(0)
+    xs = [prob.init_local(i) + 0.01 * rng.standard_normal(prob.block)
+          for i in range(prob.p)]
+    r0 = prob.exact_residual(xs)
+    for _ in range(3):
+        deps = _full_deps(prob, xs)
+        xs = [prob.update(i, xs[i], deps[i]) for i in range(prob.p)]
+    # 3 synchronous sweeps contract the l1 residual by ~d³
+    assert prob.exact_residual(xs) < 0.85 ** 3 * r0 * 1.05
+
+
+@pytest.mark.parametrize("ordv", [1.0, 2.0, float("inf")])
+def test_update_with_residual_matches_pair(ordv):
+    prob = PageRankProblem(n=128, p=4, ord=ordv, seed=2)
+    rng = np.random.default_rng(3)
+    xs = [prob.init_local(i) + 0.01 * rng.standard_normal(prob.block)
+          for i in range(prob.p)]
+    deps = _full_deps(prob, xs)
+    for i in range(prob.p):
+        x_ref = prob.update(i, xs[i], deps[i])
+        r_ref = prob.local_residual(i, xs[i], deps[i])
+        x_new, r_i = prob.update_with_residual(i, xs[i], deps[i])
+        np.testing.assert_allclose(x_new, x_ref, atol=1e-15)
+        assert r_i == pytest.approx(r_ref, rel=1e-12)
+        x_skip, r_none = prob.update_with_residual(i, xs[i], deps[i],
+                                                   need_residual=False)
+        assert r_none is None
+        np.testing.assert_allclose(x_skip, x_ref, atol=1e-15)
+
+
+def test_dependency_structure_is_asymmetric():
+    """Hub bias ⇒ some ordered pair (i, j) has i reading from j while j
+    never reads from i (directed block graph), and interface sizes differ
+    by direction."""
+    prob = PageRankProblem(n=256, p=4, seed=0)
+    sizes = {}
+    for i in range(prob.p):
+        for j in prob.neighbors(i):
+            sizes[(j, i)] = prob.interface(j, prob.init_local(j), i).size
+    assert any(sizes[(j, i)] != sizes[(i, j)] for (j, i) in sizes
+               if (i, j) in sizes)
+    assert any(v == 0 for v in sizes.values()) or \
+        max(sizes.values()) > 2 * min(sizes.values())
+
+
+def test_validates_construction_params():
+    with pytest.raises(ValueError):
+        PageRankProblem(n=10, p=4)
+    with pytest.raises(ValueError):
+        PageRankProblem(n=128, p=4, damping=1.5)
+
+
+@pytest.mark.parametrize("proto_name", ["pfait", "nfais2", "nfais5", "exact"])
+def test_all_protocols_terminate_on_pagerank(proto_name):
+    prob = PageRankProblem(n=128, p=4, seed=0)
+    eps = 1e-8
+    proto = {
+        "pfait": lambda: PFAIT(eps, ord=prob.ord),
+        "nfais2": lambda: NFAIS2(eps, ord=prob.ord),
+        "nfais5": lambda: NFAIS5(eps, ord=prob.ord, m=4),
+        "exact": lambda: ExactSnapshotFIFO(eps, ord=prob.ord),
+    }[proto_name]()
+    cfg = dataclasses.replace(stable_platform(), seed=0, max_iters=5000,
+                              fifo=(proto_name == "exact"))
+    r = AsyncEngine(prob, cfg, proto).run()
+    assert r.terminated
+    assert r.r_star < 10 * eps
+    assert r.k_max > 0
+
+
+def test_engine_fused_matches_unfused_on_pagerank():
+    res = {}
+    for fused in (False, True):
+        prob = PageRankProblem(n=128, p=4, seed=0)
+        cfg = dataclasses.replace(stable_platform(), seed=2, max_iters=5000,
+                                  fused=fused)
+        res[fused] = AsyncEngine(prob, cfg, PFAIT(1e-8, ord=prob.ord)).run()
+    assert res[True].terminated and res[False].terminated
+    assert res[True].r_star == pytest.approx(res[False].r_star, rel=1e-6)
+    assert res[True].k_max == res[False].k_max

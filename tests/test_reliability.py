@@ -1,0 +1,348 @@
+"""Reliability lab: trace determinism, oracle correctness, per-protocol
+false/late-detection invariants, and the PR-1 coverage backfill
+(``wants_residual`` gating for ExactSnapshotFIFO, grace-path trace).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.async_engine import (
+    AsyncEngine,
+    DelayModel,
+    EngineConfig,
+    PLATFORMS,
+    stable_platform,
+)
+from repro.core.protocols import NFAIS2, NFAIS5, PFAIT, ExactSnapshotFIFO
+from repro.core.reliability import (
+    TraceRecorder,
+    detection_report,
+    nfais5_slack,
+    platform_health,
+    replay_matches,
+    run_traced,
+)
+from repro.core.scenarios import (
+    DropMessages,
+    JitterBurst,
+    Pause,
+    Scenario,
+    Straggler,
+    standard_scenarios,
+)
+from repro.solvers.convdiff import ConvDiffProblem
+from repro.solvers.pagerank import PageRankProblem
+
+EPS = 1e-6
+BASE = 1e-3
+
+
+def _cfg(spec, seed=0, max_iters=4000, fifo=False):
+    return dataclasses.replace(
+        PLATFORMS[spec.platform](BASE), seed=seed, max_iters=max_iters,
+        fifo=fifo, scenario=spec.scenario,
+    )
+
+
+def _convdiff(seed=0):
+    return ConvDiffProblem(n=12, p=4, rho=0.9, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Seeded scenario determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", ["drop_reorder", "burst", "heavy_tail",
+                                      "pause_resume"])
+def test_same_seed_same_trace(scenario):
+    spec = standard_scenarios(BASE)[scenario]
+    assert replay_matches(
+        lambda: _convdiff(seed=5), _cfg(spec, seed=5),
+        lambda pr: PFAIT(EPS, ord=pr.ord), residual_stride=25,
+    )
+
+
+def test_different_seed_different_trace():
+    spec = standard_scenarios(BASE)["drop_reorder"]
+    traces = {}
+    for seed in (0, 1):
+        _, rec = run_traced(lambda: _convdiff(seed=0), _cfg(spec, seed=seed),
+                            lambda pr: PFAIT(EPS, ord=pr.ord))
+        traces[seed] = rec.fingerprint()
+    assert traces[0] != traces[1]
+
+
+# ---------------------------------------------------------------------------
+# Oracle correctness on a hand-built 2-worker trace
+# ---------------------------------------------------------------------------
+
+
+def test_oracle_on_hand_built_trace():
+    """2 workers, residual trajectory crossing ε at t=2.0, detection at
+    t=4.0 claiming 5e-7 while the true state sits at 2e-5: the oracle must
+    call this a false detection with latency overhead 2.0."""
+    rec = TraceRecorder()
+    rec.events = [("sweep", 0.0, 0, 1), ("sweep", 0.5, 1, 1)]
+    rec.residual_samples = [(0.0, 1.0), (1.0, 1e-3), (2.0, 9e-7), (3.0, 1e-8)]
+    rec.detect = (4.0, 5e-7)
+    rec.true_at_detect = 2e-5
+    rep = detection_report(rec, eps=1e-6, factor=10.0)
+    assert rep.terminated
+    assert rep.detected_residual == 5e-7
+    assert rep.true_at_detect == 2e-5
+    assert rep.overshoot == pytest.approx(20.0)
+    assert rep.false_detection  # 2e-5 > 10 × 1e-6
+    assert rep.t_first_below == 2.0
+    assert rep.latency_overhead == pytest.approx(2.0)
+
+
+def test_oracle_sound_detection_and_undetected():
+    rec = TraceRecorder()
+    rec.residual_samples = [(0.0, 1.0), (1.0, 5e-7)]
+    rec.detect = (1.5, 8e-7)
+    rec.true_at_detect = 9e-7
+    rep = detection_report(rec, eps=1e-6)
+    assert rep.terminated and not rep.false_detection
+    assert rep.overshoot == pytest.approx(0.9)
+    assert rep.latency_overhead == pytest.approx(0.5)
+
+    rec2 = TraceRecorder()
+    rec2.residual_samples = [(0.0, 1.0)]
+    rep2 = detection_report(rec2, eps=1e-6)
+    assert not rep2.terminated
+    assert not rep2.false_detection
+    assert math.isinf(rep2.overshoot)
+    assert rep2.latency_overhead is None
+
+
+def test_oracle_true_at_detect_matches_live_state():
+    """Engine-integrated: the recorder's detection-instant residual equals
+    the exact residual of the engine state frozen at that moment (tiny
+    2-worker problem so the sweep-event trace is fully inspectable)."""
+    prob_mk = lambda: ConvDiffProblem(n=8, p=2, rho=0.9, seed=1)
+    cfg = dataclasses.replace(stable_platform(BASE), seed=1, max_iters=4000)
+    res, rec = run_traced(prob_mk, cfg, lambda pr: NFAIS2(EPS, ord=pr.ord),
+                          residual_stride=10)
+    assert res.terminated
+    assert rec.detect is not None
+    assert rec.true_at_detect < 10 * EPS
+    # trace sanity: 2 workers, monotone times, detect event present
+    assert {e[2] for e in rec.events if e[0] == "sweep"} == {0, 1}
+    ts = [e[1] for e in rec.events]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# Per-protocol invariant suite
+# ---------------------------------------------------------------------------
+
+
+LOSSLESS_FIFO_SCENARIOS = ("stable", "unstable", "burst", "straggler",
+                           "pause_resume")
+
+
+@pytest.mark.parametrize("scenario", LOSSLESS_FIFO_SCENARIOS)
+@pytest.mark.parametrize("proto", ["nfais2", "exact"])
+def test_exact_snapshot_protocols_never_false_detect(proto, scenario):
+    """Consistent-cut residuals are exact for the recorded vector: under
+    every lossless scenario (FIFO for the marker protocol), detection is
+    never off by the oracle's decade factor."""
+    spec = standard_scenarios(BASE)[scenario]
+    mk = (lambda pr: ExactSnapshotFIFO(EPS, ord=pr.ord)) if proto == "exact" \
+        else (lambda pr: NFAIS2(EPS, ord=pr.ord))
+    res, rec = run_traced(lambda: _convdiff(0),
+                          _cfg(spec, seed=0, fifo=(proto == "exact")), mk,
+                          residual_stride=25)
+    rep = detection_report(rec, EPS)
+    assert not rep.false_detection
+    if res.terminated:
+        assert rep.detected_residual < EPS
+
+
+def test_pfait_false_detects_under_blackout():
+    """The constructed adversarial regime: interface data stops flowing,
+    every worker converges to its frozen-boundary subproblem, PFAIT's live
+    local residuals all drop below ε while the true global residual is
+    orders of magnitude above — a false detection, deterministically."""
+    spec = standard_scenarios(BASE)["blackout"]
+    res, rec = run_traced(lambda: _convdiff(0), _cfg(spec, seed=0),
+                          lambda pr: PFAIT(EPS, ord=pr.ord),
+                          residual_stride=25)
+    rep = detection_report(rec, EPS)
+    assert res.terminated
+    assert rep.detected_residual < EPS       # the protocol *claimed* success
+    assert rep.false_detection               # ... and the claim is a lie
+    assert rep.overshoot > 100.0
+    assert res.msg_dropped.get("data", 0) > 0
+
+
+def test_nfais2_survives_blackout_without_false_detection():
+    """NFAIS2 snapshot messages carry the interface data, so its records
+    stay consistent even on a lossy platform: it goes undetected rather
+    than lying."""
+    spec = standard_scenarios(BASE)["blackout"]
+    res, rec = run_traced(lambda: _convdiff(0),
+                          _cfg(spec, seed=0, max_iters=400),
+                          lambda pr: NFAIS2(EPS, ord=pr.ord))
+    rep = detection_report(rec, EPS)
+    assert not res.terminated
+    assert not rep.false_detection
+
+
+def test_nfais5_error_bounded_by_slack():
+    """NFAIS5's approximate records guarantee the true residual at
+    detection within (1 + c(p, m))·ε on a platform that honours its
+    staleness assumption."""
+    for seed in range(3):
+        prob_mk = lambda: _convdiff(seed)
+        cfg = dataclasses.replace(stable_platform(BASE), seed=seed,
+                                  max_iters=30_000)
+        m = 4
+        res, rec = run_traced(prob_mk, cfg,
+                              lambda pr: NFAIS5(EPS, ord=pr.ord, m=m))
+        assert res.terminated
+        rep = detection_report(rec, EPS)
+        prob = prob_mk()
+        assert rep.true_at_detect <= nfais5_slack(prob.p, m) * EPS
+
+
+# ---------------------------------------------------------------------------
+# PageRank family under the lab
+# ---------------------------------------------------------------------------
+
+
+def test_pagerank_pfait_false_detects_under_blackout_too():
+    spec = standard_scenarios(BASE)["blackout"]
+    res, rec = run_traced(lambda: PageRankProblem(n=128, p=4, seed=0),
+                          _cfg(spec, seed=0),
+                          lambda pr: PFAIT(1e-8, ord=pr.ord),
+                          residual_stride=25)
+    rep = detection_report(rec, 1e-8)
+    assert res.terminated and rep.false_detection
+
+
+@pytest.mark.parametrize("proto_mk", [
+    lambda pr: PFAIT(1e-8, ord=pr.ord),
+    lambda pr: NFAIS2(1e-8, ord=pr.ord),
+    lambda pr: NFAIS5(1e-8, ord=pr.ord, m=4),
+])
+def test_pagerank_sound_detection_on_stable_platform(proto_mk):
+    spec = standard_scenarios(BASE)["stable"]
+    res, rec = run_traced(lambda: PageRankProblem(n=128, p=4, seed=0),
+                          _cfg(spec, seed=2), proto_mk, residual_stride=20)
+    rep = detection_report(rec, 1e-8)
+    assert res.terminated
+    assert not rep.false_detection
+
+
+# ---------------------------------------------------------------------------
+# Platform-health wiring (runtime/fault_tolerance.py)
+# ---------------------------------------------------------------------------
+
+
+def test_health_flags_straggler_and_pause():
+    specs = standard_scenarios(BASE)
+    _, rec = run_traced(lambda: _convdiff(0), _cfg(specs["straggler"], seed=0),
+                        lambda pr: PFAIT(EPS, ord=pr.ord))
+    health = platform_health(rec, 4, BASE)
+    assert 0 in health.stragglers
+
+    _, rec = run_traced(lambda: _convdiff(0),
+                        _cfg(specs["pause_resume"], seed=0),
+                        lambda pr: PFAIT(EPS, ord=pr.ord))
+    health = platform_health(rec, 4, BASE)
+    assert health.silent_workers == (1,)
+    assert health.max_silence >= 200 * BASE
+
+
+def test_health_clean_on_stable_platform():
+    spec = standard_scenarios(BASE)["stable"]
+    _, rec = run_traced(lambda: _convdiff(0), _cfg(spec, seed=0),
+                        lambda pr: PFAIT(EPS, ord=pr.ord))
+    health = platform_health(rec, 4, BASE)
+    assert health.silent_workers == ()
+    assert health.stragglers == ()
+
+
+# ---------------------------------------------------------------------------
+# DelayModel construction-time validation (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    {"base": -1e-3},
+    {"base": 0.0},
+    {"base": float("nan")},
+    {"base": 1e-3, "sigma": -0.5},
+    {"base": 1e-3, "floor": -1.0},
+    {"base": 1e-3, "dist": "cauchy"},
+    {"base": 1e-3, "dist": "pareto", "shape": 0.0},
+    {"base": 1e-3, "dist": "pareto", "shape": -2.0},
+])
+def test_delay_model_rejects_bad_params_at_construction(kw):
+    with pytest.raises(ValueError):
+        DelayModel(**kw)
+
+
+def test_delay_model_valid_families_sample_positive():
+    rng = np.random.default_rng(0)
+    for dm in (DelayModel(1e-3), DelayModel(1e-3, dist="pareto", shape=1.2),
+               DelayModel(1e-3, dist="fixed")):
+        s = dm.sample(rng)
+        assert s >= dm.floor and np.isfinite(s)
+        v = dm.sample(rng, 16)
+        assert np.all(v >= dm.floor) and np.all(np.isfinite(v))
+
+
+# ---------------------------------------------------------------------------
+# Backfill: wants_residual gating for ExactSnapshotFIFO (PR 1 flag)
+# ---------------------------------------------------------------------------
+
+
+def test_exact_snapshot_wants_residual_gating():
+    """Once a worker's record is taken, the fused engine must stop
+    evaluating its residual (protocol receives NaN) — and the protocol must
+    still terminate correctly off the recorded cut."""
+    calls = []
+
+    class SpyExact(ExactSnapshotFIFO):
+        def on_iteration(self, eng, i, t, r_i):
+            calls.append((i, self.rec_own[i] is not None, math.isnan(r_i)))
+            super().on_iteration(eng, i, t, r_i)
+
+    prob = _convdiff(0)
+    cfg = dataclasses.replace(stable_platform(BASE), seed=0, fifo=True,
+                              max_iters=30_000, fused=True)
+    proto = SpyExact(EPS, ord=prob.ord)
+    res = AsyncEngine(prob, cfg, proto).run()
+    assert res.terminated
+    recorded_calls = [c for c in calls if c[1]]
+    assert recorded_calls, "no post-record iterations observed"
+    # every post-record iteration was gated to NaN...
+    assert all(nan for _, _, nan in recorded_calls)
+    # ...and no unrecorded worker ever got a gated residual
+    assert all(not nan for _, rec, nan in calls if not rec)
+
+
+def test_grace_path_returns_undetected_with_trace_intact():
+    """Backfill: the engine's no-hang grace window (all workers at
+    max_iters, no detection) must return undetected AND leave a complete,
+    scorable trace behind."""
+    spec = standard_scenarios(BASE)["blackout"]
+    res, rec = run_traced(lambda: _convdiff(0),
+                          _cfg(spec, seed=0, max_iters=60),
+                          lambda pr: NFAIS2(1e-12, ord=pr.ord),
+                          residual_stride=10)
+    assert not res.terminated
+    assert res.k_max == 60
+    assert rec.detect is None
+    assert rec.result is res
+    sweeps = rec.sweep_events()
+    assert len(sweeps) == 4 * 60
+    assert rec.residual_samples, "trajectory sampling survived the grace path"
+    assert rec.events[-1][0] == "finish"
+    rep = detection_report(rec, 1e-12)
+    assert not rep.terminated and not rep.false_detection

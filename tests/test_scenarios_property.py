@@ -1,0 +1,128 @@
+"""Property tests for the scenario algebra (hypothesis-optional, PR 1
+pattern: degrades to seeded-random cases without the dep).
+
+Invariants:
+  * composition preserves event-time sanity — transformed delays stay
+    positive and finite, pause resumption never travels back in time, and
+    the recorded engine trace is time-monotone under any composition;
+  * drop/reorder never loses protocol-termination *liveness* while the
+    engine's max_iters grace window is active: the run always returns
+    (terminated or undetected), never hangs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to seeded-random cases
+    HAVE_HYPOTHESIS = False
+
+
+def given_seed(max_examples, fallback_seeds):
+    """``@given(seed=...)`` with hypothesis, parametrized seeds without."""
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(seed=st.integers(0, 10_000))(fn)
+            )
+    else:
+        def deco(fn):
+            return pytest.mark.parametrize("seed", fallback_seeds)(fn)
+    return deco
+
+
+from repro.core.async_engine import PLATFORMS, stable_platform
+from repro.core.protocols import NFAIS2, NFAIS5, PFAIT
+from repro.core.reliability import run_traced
+from repro.core.scenarios import (
+    DropMessages,
+    JitterBurst,
+    Pause,
+    Scenario,
+    Straggler,
+    TailSpike,
+)
+from repro.solvers.convdiff import ConvDiffProblem
+
+BASE = 1e-3
+
+
+def random_scenario(rng: np.random.Generator) -> Scenario:
+    """A random composition drawn from the whole effect algebra."""
+    pool = [
+        TailSpike(prob=float(rng.uniform(0, 0.4)),
+                  mult=float(rng.uniform(1, 50))),
+        JitterBurst(period=float(rng.uniform(10, 80)) * BASE,
+                    duration=float(rng.uniform(1, 9)) * BASE,
+                    mult=float(rng.uniform(1, 40))),
+        DropMessages(prob=float(rng.uniform(0, 0.9)),
+                     after=float(rng.uniform(0, 50)) * BASE),
+        Straggler(workers=(int(rng.integers(0, 4)),),
+                  factor=float(rng.uniform(1, 12))),
+        Pause(worker=int(rng.integers(0, 4)),
+              at=float(rng.uniform(0, 80)) * BASE,
+              duration=float(rng.uniform(10, 200)) * BASE),
+    ]
+    k = int(rng.integers(1, len(pool) + 1))
+    picks = rng.choice(len(pool), size=k, replace=False)
+    return Scenario("random", tuple(pool[int(i)] for i in sorted(picks)))
+
+
+@given_seed(max_examples=25, fallback_seeds=(0, 7, 99, 1234, 5555))
+def test_composition_preserves_delay_sanity(seed):
+    rng = np.random.default_rng(seed)
+    sc = random_scenario(rng)
+    for _ in range(200):
+        t = float(rng.uniform(0, 0.5))
+        kind = ["data", "snap2", "marker", "reduce"][int(rng.integers(0, 4))]
+        d_in = float(rng.uniform(1e-6, 1e-2))
+        d = sc.channel_delay(t, kind, d_in, rng)
+        if d is not None:
+            assert np.isfinite(d) and d > 0.0
+            assert d >= d_in  # effects only inflate, never rewind time
+        else:
+            assert kind == "data"  # only data kinds are droppable here
+        w = int(rng.integers(0, 4))
+        c = sc.compute_delay(t, w, d_in, rng)
+        assert np.isfinite(c) and c >= d_in
+        resume = sc.paused_until(t, w)
+        if resume is not None:
+            assert resume > t  # resumption strictly in the future
+
+
+@given_seed(max_examples=6, fallback_seeds=(1, 42, 777))
+def test_trace_event_times_monotone_under_random_scenario(seed):
+    rng = np.random.default_rng(seed)
+    sc = random_scenario(rng)
+    cfg = dataclasses.replace(stable_platform(BASE), seed=seed,
+                              max_iters=200, scenario=sc)
+    _, rec = run_traced(lambda: ConvDiffProblem(n=8, p=4, rho=0.9, seed=0),
+                        cfg, lambda pr: PFAIT(1e-6, ord=pr.ord))
+    ts = [e[1] for e in rec.events]
+    assert ts == sorted(ts)
+    assert rec.events[-1][0] == "finish"
+
+
+@given_seed(max_examples=6, fallback_seeds=(3, 17, 2024))
+def test_drop_reorder_preserves_liveness(seed):
+    """However lossy/reordered the channels, a run with max_iters grace
+    always returns: either a detection or a graceful undetected exit with
+    every worker at the iteration cap."""
+    rng = np.random.default_rng(seed)
+    sc = Scenario("lossy", (
+        DropMessages(prob=float(rng.uniform(0.3, 1.0))),
+        TailSpike(prob=0.3, mult=float(rng.uniform(5, 40))),
+    ))
+    proto = [lambda pr: PFAIT(1e-6, ord=pr.ord),
+             lambda pr: NFAIS2(1e-6, ord=pr.ord),
+             lambda pr: NFAIS5(1e-6, ord=pr.ord, m=3)][seed % 3]
+    cfg = dataclasses.replace(stable_platform(BASE), seed=seed,
+                              max_iters=250, scenario=sc)
+    res, rec = run_traced(lambda: ConvDiffProblem(n=8, p=4, rho=0.9, seed=1),
+                          cfg, proto)
+    assert res.terminated or res.k_min == 250
+    assert rec.events[-1][0] == "finish"
