@@ -1,0 +1,135 @@
+"""Perf-regression gate: compare fresh smoke benchmarks against committed
+baselines and fail (exit 1) when a metric regresses beyond its stated
+tolerance.
+
+Metrics and tolerances (the CI contract):
+
+* ``fused_smoke`` (BENCH_fused_smoke.json):
+  - ``event_sim.wall_speedup`` — the fused/unfused event-sim wall-time
+    ratio, one-sided floor at −30%.  A *ratio* of two times measured in
+    the same process, so it transfers across runner hardware; the floor
+    covers shared-runner noise while still catching a lost fusion, and a
+    runner measuring a *better* ratio than the baseline never fails.
+  - ``sharded[*].{unfused,fused}.hbm_bytes_per_device_per_sweep`` — exact
+    match.  HLO-derived byte counts are deterministic for a pinned jax
+    version; ANY drift means the lowering changed and the baseline must be
+    regenerated deliberately (the gate runs only on the pinned-jax CI leg).
+
+* ``reliability_smoke`` (BENCH_reliability_smoke.json):
+  - per-cell ``false_rate`` / ``undetected_rate`` — exact (seeded runs are
+    deterministic), plus the acceptance invariants must hold.
+
+Usage:
+  python benchmarks/check_regression.py fused_smoke \
+      --baseline benchmarks/baselines/BENCH_fused_smoke.json \
+      --fresh /tmp/BENCH_fused_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterator, Tuple
+
+Check = Tuple[str, float, float, str, float]  # name, base, fresh, mode, tol
+
+
+def _fused_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
+    # one-sided: only a LOSS of fused speedup is a regression — runner
+    # hardware measuring a better ratio than the committed baseline must
+    # not fail the gate (regenerate baselines from a CI-runner artifact if
+    # the fleet drifts)
+    yield (
+        "event_sim.wall_speedup",
+        base["event_sim"]["wall_speedup"],
+        fresh["event_sim"]["wall_speedup"],
+        "floor",
+        0.30,
+    )
+    base_rows = {r["sweep"]: r for r in base["sharded"]}
+    fresh_rows = {r["sweep"]: r for r in fresh["sharded"]}
+    for sweep, brow in sorted(base_rows.items()):
+        frow = fresh_rows[sweep]
+        for leg in ("unfused", "fused"):
+            yield (
+                f"sharded.{sweep}.{leg}.hbm_bytes_per_device_per_sweep",
+                brow[leg]["hbm_bytes_per_device_per_sweep"],
+                frow[leg]["hbm_bytes_per_device_per_sweep"],
+                "exact",
+                0.0,
+            )
+
+
+def _reliability_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
+    def cells(rep):
+        return {(c["problem"], c["scenario"], c["protocol"]): c for c in rep["cells"]}
+
+    fresh_cells = cells(fresh)
+    for key, bcell in sorted(cells(base).items()):
+        fcell = fresh_cells[key]
+        name = "/".join(key)
+        if bcell["status"] != "ok":
+            continue
+        yield (f"{name}.false_rate", bcell["false_rate"], fcell["false_rate"], "exact", 0.0)
+        yield (
+            f"{name}.undetected_rate",
+            bcell["undetected_rate"],
+            fcell["undetected_rate"],
+            "exact",
+            0.0,
+        )
+    yield (
+        "acceptance.ok",
+        float(base["acceptance"]["ok"]),
+        float(fresh["acceptance"]["ok"]),
+        "exact",
+        0.0,
+    )
+
+
+BENCHES = {
+    "fused_smoke": _fused_smoke,
+    "reliability_smoke": _reliability_smoke,
+}
+
+
+def run_checks(bench: str, base: Dict, fresh: Dict) -> int:
+    failures = 0
+    for name, b, f, mode, tol in BENCHES[bench](base, fresh):
+        if mode == "exact":
+            ok = b == f
+            detail = f"baseline={b!r} fresh={f!r} (exact)"
+        elif mode == "floor":
+            ok = f >= b * (1.0 - tol)
+            detail = f"baseline={b:.4g} fresh={f:.4g} (floor {b * (1.0 - tol):.4g}, -{tol:.0%})"
+        else:
+            rel = abs(f - b) / abs(b) if b else float("inf")
+            ok = rel <= tol
+            detail = f"baseline={b:.4g} fresh={f:.4g} drift={rel:.1%} (tol ±{tol:.0%})"
+        print(f"{'ok  ' if ok else 'FAIL'} {name}: {detail}")
+        failures += not ok
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", choices=sorted(BENCHES))
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = run_checks(args.bench, base, fresh)
+    if failures:
+        sys.exit(
+            f"{failures} metric(s) regressed beyond tolerance "
+            f"(regenerate benchmarks/baselines/ deliberately if the "
+            f"change is intended)"
+        )
+    print("no regressions")
+
+
+if __name__ == "__main__":
+    main()

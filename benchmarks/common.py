@@ -9,12 +9,14 @@ r*, mean virtual wall-time, and mean k_max over ``SEEDS`` runs.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.async_engine import AsyncEngine, stable_platform
+from repro.core.async_engine import PLATFORMS, AsyncEngine, stable_platform
 from repro.core.protocols import NFAIS2, NFAIS5, PFAIT, ExactSnapshotFIFO
 from repro.solvers.convdiff import ConvDiffProblem
 
@@ -105,3 +107,267 @@ def csv_rows(table: str, rows: List[Dict]) -> List[str]:
                    f"p={r['p']};eps={r['eps']:.0e}")
         out.append(f"{table}/{r['protocol']}_p{r['p']},{us:.0f},{derived}")
     return out
+
+
+# ---------------------------------------------------------------------------
+# Campaign cell API (benchmarks/campaign.py executes these)
+# ---------------------------------------------------------------------------
+#
+# A *cell spec* is a JSON-able dict with a ``kind`` key naming a registered
+# kind; the remaining keys are the kind function's kwargs.  Specs are the
+# campaign runner's cache identity (together with the code fingerprint and
+# any declared environment), so kinds must be pure functions of their spec:
+# same spec + same sources ⇒ same result.
+
+
+@dataclass(frozen=True)
+class CellKind:
+    fn: Callable[..., Dict]
+    cache: bool = True            # False: timing cells, always re-measured
+    env: Tuple[str, ...] = ()     # extra cache-key context ("jax", "numpy")
+    cost: Optional[Callable[[Dict], float]] = None  # LPT scheduling hint
+
+
+CELL_KINDS: Dict[str, CellKind] = {}
+
+
+def cell_kind(name: str, *, cache: bool = True, env: Tuple[str, ...] = (),
+              cost: Optional[Callable[[Dict], float]] = None):
+    """Register a campaign cell kind (decorator)."""
+
+    def register(fn: Callable[..., Dict]) -> Callable[..., Dict]:
+        CELL_KINDS[name] = CellKind(fn=fn, cache=cache, env=env, cost=cost)
+        return fn
+
+    return register
+
+
+def run_cell_spec(spec: Dict) -> Dict:
+    kind = CELL_KINDS[spec["kind"]]
+    return kind.fn(**{k: v for k, v in spec.items() if k != "kind"})
+
+
+def spec_env(spec: Dict) -> Dict[str, str]:
+    """Environment the spec's kind declared result-sensitivity to."""
+    out: Dict[str, str] = {}
+    for name in CELL_KINDS[spec["kind"]].env:
+        if name == "jax":
+            import jax
+
+            out["jax"] = jax.__version__
+        elif name == "numpy":
+            out["numpy"] = np.__version__
+        else:
+            raise KeyError(f"unknown env sensitivity {name!r}")
+    return out
+
+
+def spec_cost(spec: Dict) -> float:
+    cost = CELL_KINDS[spec["kind"]].cost
+    return float(cost(spec)) if cost is not None else 1.0
+
+
+# Problem instances are pure functions of (family, seed, kw) and are
+# treated as read-only by the engine apart from per-sweep scratch buffers,
+# so one worker can reuse them across every cell that shares the tuple
+# (the PageRank graph build alone is ~30 ms × 96 cells serially).  The
+# cache is THREAD-LOCAL because those scratch buffers assume one engine at
+# a time — under the campaign's thread executor each thread memoises its
+# own instances instead of racing on shared buffers.
+_PROBLEM_CACHE = threading.local()
+
+
+def make_problem_cached(family: str, seed: int = 0, **kw):
+    cache = getattr(_PROBLEM_CACHE, "probs", None)
+    if cache is None:
+        cache = _PROBLEM_CACHE.probs = {}
+    key = f"{family}/{seed}/{sorted(kw.items())}"
+    prob = cache.get(key)
+    if prob is None:
+        prob = cache[key] = make_problem(family, seed=seed, **kw)
+    return prob
+
+
+def _finite(x: Optional[float]) -> Optional[float]:
+    """Strict-JSON scalar: non-finite → None at the source, so fresh cells
+    and cache hits (which round-trip through JSON) are byte-identical."""
+    if x is None:
+        return None
+    x = float(x)
+    return x if np.isfinite(x) else None
+
+
+def _reliability_cost(spec: Dict) -> float:
+    w = 1.0
+    if spec.get("protocol") in ("nfais2", "exact"):
+        w *= 3.0  # snapshot rounds / undetected cells run to max_iters
+    if spec.get("scenario") in ("blackout", "heavy_tail", "burst"):
+        w *= 3.0
+    return w * float(spec.get("max_iters", 3000))
+
+
+@cell_kind("reliability_run", env=("numpy",), cost=_reliability_cost)
+def _cell_reliability_run(family: str, protocol: str, scenario: str,
+                          seed: int, eps: float, max_iters: int,
+                          problem: Dict, compute_base: float = 1e-3,
+                          residual_stride: int = 25,
+                          factor: float = 10.0) -> Dict:
+    """One traced engine run of the reliability matrix, oracle-scored.
+
+    ``scenario`` names an entry of ``standard_scenarios(compute_base)``;
+    ``problem`` is the family factory kwargs.  Returns the per-run record
+    the matrix aggregates (benchmarks/reliability_matrix.py).
+    """
+    from repro.core.reliability import (
+        detection_report,
+        platform_health,
+        run_traced,
+    )
+    from repro.core.scenarios import standard_scenarios
+
+    spec = standard_scenarios(compute_base)[scenario]
+    if protocol == "exact" and spec.lossy:
+        return {
+            "status": "precondition_violated",
+            "reason": ("Chandy-Lamport markers require lossless FIFO "
+                       "channels; scenario drops messages"),
+        }
+    cfg = dataclasses.replace(
+        PLATFORMS[spec.platform](compute_base),
+        seed=seed, max_iters=max_iters,
+        fifo=(protocol == "exact"), scenario=spec.scenario,
+    )
+    res, rec = run_traced(
+        lambda: make_problem_cached(family, seed=seed, **problem),
+        cfg,
+        lambda pr: make_protocol(protocol, eps, pr.ord),
+        residual_stride=residual_stride,
+        record_sends=False,
+    )
+    rep = detection_report(rec, eps, factor=factor)
+    health = platform_health(rec, problem["p"], compute_base)
+    proto_bytes = sum(v for k, v in res.msg_bytes.items() if k != "data")
+    return {
+        "status": "ok",
+        "seed": seed,
+        "terminated": res.terminated,
+        "detected_residual": _finite(rep.detected_residual),
+        "true_at_detect": _finite(rep.true_at_detect),
+        "certified_residual": _finite(rep.certified_residual),
+        "claim": rep.claim,
+        "overshoot": _finite(rep.overshoot),
+        "false_detection": rep.false_detection,
+        "latency_overhead": _finite(rep.latency_overhead),
+        "wtime": _finite(res.wtime),
+        "k_max": res.k_max,
+        "protocol_bytes": proto_bytes,
+        "msg_dropped": dict(res.msg_dropped),
+        "r_star": _finite(res.r_star),
+        "health": {
+            "silent_workers": [int(w) for w in health.silent_workers],
+            "stragglers": [int(w) for w in health.stragglers],
+            "max_silence": float(health.max_silence),
+        },
+    }
+
+
+@cell_kind("table", env=("numpy",),
+           cost=lambda s: s.get("n", 16) ** 3 * s.get("p", 4))
+def _cell_table(protocol: str, eps: float, n: int, p: int,
+                rho: float = 0.93, seeds: Tuple[int, ...] = SEEDS,
+                max_iters: int = 60_000, platform: str = "stable",
+                fused: bool = True) -> Dict:
+    """One paper-table cell (`run_cell`) with the platform given by preset
+    name so the spec stays JSON-able."""
+    return run_cell(protocol, eps, n, p, rho=rho, seeds=tuple(seeds),
+                    max_iters=max_iters, platform=PLATFORMS[platform],
+                    fused=fused)
+
+
+@cell_kind("fused_event", cache=False)  # timing cell: always re-measured
+def _cell_fused_event(protocol: str, eps: float, n: int, p: int,
+                      seeds: Tuple[int, ...], fused: bool,
+                      repeat: int = 0) -> Dict:
+    """One timed event-simulator cell of the fused-path head-to-head
+    (``repeat`` only distinguishes repeated specs)."""
+    row = run_cell(protocol, eps, n, p, seeds=tuple(seeds), fused=fused)
+    row["repeat"] = repeat
+    return row
+
+
+@cell_kind("detection_grid", env=("jax", "numpy"),
+           cost=lambda s: s.get("T", 512) * len(s.get("seeds", (0,))))
+def _cell_detection_grid(family: str, mode: str, seeds, T: int,
+                         eps_grid, staleness_grid, persistence_grid,
+                         problem: Dict, ord: float = None) -> Dict:
+    """Whole (seed × ε × K × m) detection sweep as one device program.
+
+    Per-seed synchronous contribution series come from the problems'
+    ``update_with_residual_batched`` under ``lax.scan``; the grid of
+    monitor configurations is evaluated by ``detection.batched_monitor``
+    in the same jitted pipeline.  Output: the verdict grids (JSON lists)
+    plus summary statistics.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import detection
+
+    probs = [make_problem_cached(family, seed=int(s), **problem)
+             for s in seeds]
+    p0 = probs[0]
+    use_ord = float(ord) if ord is not None else float(p0.ord)
+    if family == "convdiff":
+        n = problem["n"]
+        x0 = jnp.zeros((len(probs), n, n, n), jnp.float32)
+        b = jnp.asarray(np.stack([pr.b_global for pr in probs]),
+                        dtype=jnp.float32)
+        def step_fn(X, b=b):
+            return p0.update_with_residual_batched(X, b=b)
+    elif family == "pagerank":
+        n = problem["n"]
+        x0 = jnp.full((len(probs), n), 1.0 / n, jnp.float32)
+        P = jnp.asarray(np.stack([pr.to_dense() for pr in probs]),
+                        dtype=jnp.float32)
+        def step_fn(X, P=P):
+            return p0.update_with_residual_batched(X, P=P)
+    else:
+        raise KeyError(family)
+    series = detection.contribution_series(step_fn, x0, T)
+    v = detection.batched_monitor(
+        mode, series, eps_grid, staleness_grid, persistence_grid,
+        ord=use_ord,
+    )
+    conv = np.asarray(v.converged)
+    dstep = np.asarray(v.detect_step)
+    return {
+        "family": family,
+        "mode": mode,
+        "ord": use_ord,
+        "T": int(T),
+        "seeds": [int(s) for s in seeds],
+        "eps_grid": [float(e) for e in eps_grid],
+        "staleness_grid": [int(k) for k in staleness_grid],
+        "persistence_grid": [int(m) for m in persistence_grid],
+        "converged": conv.tolist(),
+        "detect_step": dstep.tolist(),
+        "detected_residual": [
+            _finite(x) for x in np.asarray(
+                v.detected_residual, dtype=np.float64).reshape(-1)
+        ],
+        "lanes": int(conv.size),
+        "converged_lanes": int(conv.sum()),
+        "mean_detect_step_converged": (
+            float(dstep[conv].mean()) if conv.any() else None),
+    }
+
+
+@cell_kind("fused_sharded", env=("jax",))
+def _cell_fused_sharded(n: int, sweep: str, fuse_residual: bool,
+                        inner_sweeps: int = 1,
+                        use_kernel: bool = False) -> Dict:
+    """HLO-derived HBM/wire bytes of the sharded solver (deterministic for
+    a given jax version — declared via ``env``)."""
+    from benchmarks.bench_fused import measure_sharded
+
+    return measure_sharded(n, sweep, fuse_residual,
+                           inner_sweeps=inner_sweeps, use_kernel=use_kernel)

@@ -11,10 +11,8 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
-import dataclasses
 import json
 import sys
-
 
 def measure_lm(arch: str, shape: str, variant: str, attn_impl: str = "blocked",
                microbatch=None, tp_reduce_bf16: bool = False,
@@ -35,7 +33,6 @@ def measure_solver(variant: str, inner_sweeps: int = 4, n: int = 1024,
     import jax.numpy as jnp
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
-
     from repro.core import detection
     from repro.launch import hlo_analysis
     from repro.launch.mesh import make_production_mesh

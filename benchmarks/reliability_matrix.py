@@ -5,10 +5,12 @@ For every cell of {PFAIT, NFAIS2, NFAIS5, ExactSnapshotFIFO} ×
 and score each with the false/late-detection oracle
 (core/reliability.py).  Reported per cell:
 
-* ``false_rate``        — fraction of runs where the protocol claimed
-                          r < ε while the true residual at the detection
-                          instant exceeded 10ε (a decade — beyond any
-                          reasonable margin policy),
+* ``false_rate``        — fraction of runs where the protocol's *claim*
+                          was a decade off: live-claim protocols (PFAIT,
+                          NFAIS5) are scored against r(x̄) at the detection
+                          instant, record-claim protocols (NFAIS2, exact
+                          snapshot) against the recomputed residual of the
+                          consistent vector they certify,
 * ``undetected_rate``   — runs that exhausted max_iters without detection
                           (the engine's no-hang grace path),
 * ``latency_overhead``  — mean t_detect − t_first(r_true ≤ ε): the cost of
@@ -21,32 +23,43 @@ and score each with the false/late-detection oracle
 reliable FIFO channels, and a lost marker is a protocol misuse, not a
 detection failure.
 
+Since PR 3 the matrix runs on the campaign runner (benchmarks/campaign.py):
+every (cell × seed) run is a content-addressed cell executed across a
+process pool and cached under ``.campaign-cache/`` — a warm re-run
+recomputes nothing, an interrupted run resumes where it stopped, and the
+cold 64-cell matrix is ≥3× faster wall-clock than the PR-2 serial runner
+(both recorded in the report's ``meta`` block).
+
 The acceptance invariants of the lab are checked at the end (and the
 process exits non-zero when violated):
   * at least one scenario where PFAIT false-detects,
   * zero false detections across all NFAIS2/ExactSnapshotFIFO cells.
 
-Run:   PYTHONPATH=src:. python benchmarks/reliability_matrix.py
-Smoke: PYTHONPATH=src:. python benchmarks/reliability_matrix.py --smoke
+Run:    PYTHONPATH=src:. python benchmarks/reliability_matrix.py
+Smoke:  PYTHONPATH=src:. python benchmarks/reliability_matrix.py --smoke
+Serial: add --serial (the pre-campaign in-process path, for speedup
+        measurements against the same cell code)
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
+import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Sequence
+
+# One BLAS thread per process, set before numpy loads: the event-sim cells
+# run thousands of tiny matvecs, and OpenBLAS's spinning worker threads
+# both slow the serial path (~1.5×) and destroy process-pool scaling.
+for _v in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS", "MKL_NUM_THREADS"):
+    os.environ.setdefault(_v, "1")
 
 import numpy as np
 
-from repro.core.async_engine import PLATFORMS
-from repro.core.reliability import (
-    detection_report,
-    platform_health,
-    run_traced,
-)
 from repro.core.scenarios import standard_scenarios
-from benchmarks.common import make_problem, make_protocol
+
+from benchmarks import campaign
+from benchmarks.campaign import CampaignConfig, write_json_atomic
+from benchmarks.common import run_cell_spec
 
 COMPUTE_BASE = 1e-3
 FACTOR = 10.0           # oracle disagreement factor (one decade)
@@ -59,86 +72,80 @@ PROBLEMS = {
 PROTOCOLS = ("pfait", "nfais2", "nfais5", "exact")
 EXACT_SNAPSHOT_PROTOCOLS = ("nfais2", "exact")  # consistent-cut residuals
 
+#: wall-clock of the PR-2 serial runner on the reference machine (commit
+#: 2aa62c4, 64 cells × 3 seeds; median of 8 runs interleaved with campaign
+#: runs — the container's CPU-steal variance is ±30%, see EXPERIMENTS.md
+#: §Campaign) — the baseline the campaign speedup in the report meta is
+#: measured against when --baseline-wall is not given.
+SERIAL_PR2_BASELINE_S = 54.2
 
-def run_matrix_cell(family: str, protocol: str, spec, seeds,
-                    residual_stride: int = 25) -> Dict:
-    kw, eps, max_iters = PROBLEMS[family]
+
+def run_specs(families: Sequence[str], scenario_names: Sequence[str],
+              protocols: Sequence[str], seeds: Sequence[int],
+              residual_stride: int = 25) -> List[Dict]:
+    """One campaign spec per (family × scenario × protocol × seed) run."""
+    specs = []
+    for family in families:
+        kw, eps, max_iters = PROBLEMS[family]
+        for name in scenario_names:
+            for protocol in protocols:
+                for seed in seeds:
+                    specs.append({
+                        "kind": "reliability_run",
+                        "family": family,
+                        "protocol": protocol,
+                        "scenario": name,
+                        "seed": int(seed),
+                        "eps": eps,
+                        "max_iters": max_iters,
+                        "problem": kw,
+                        "compute_base": COMPUTE_BASE,
+                        "residual_stride": residual_stride,
+                        "factor": FACTOR,
+                    })
+    return specs
+
+
+def aggregate_cell(family: str, protocol: str, scenario: str,
+                   runs: List[Dict], spec) -> Dict:
+    """Fold per-seed run records into one PR-2-shaped matrix cell."""
+    kw, eps, _ = PROBLEMS[family]
     cell = {
-        "problem": family, "protocol": protocol, "scenario": spec.name,
-        "platform": spec.platform, "eps": eps, "seeds": list(seeds),
+        "problem": family, "protocol": protocol, "scenario": scenario,
+        "platform": spec.platform, "eps": eps,
+        "seeds": [r.get("seed") for r in runs if "seed" in r],
         "scenario_spec": spec.scenario.describe(),
     }
-    if protocol == "exact" and spec.lossy:
+    if any(r["status"] == "precondition_violated" for r in runs):
         cell["status"] = "precondition_violated"
-        cell["reason"] = ("Chandy-Lamport markers require lossless FIFO "
-                          "channels; scenario drops messages")
+        cell["reason"] = runs[0]["reason"]
         return cell
-    runs: List[Dict] = []
-    healths = []
-    for seed in seeds:
-        cfg = dataclasses.replace(
-            PLATFORMS[spec.platform](COMPUTE_BASE),
-            seed=seed, max_iters=max_iters,
-            fifo=(protocol == "exact"), scenario=spec.scenario,
-        )
-        res, rec = run_traced(
-            lambda: make_problem(family, seed=seed, **kw),
-            cfg,
-            lambda pr: make_protocol(protocol, eps, pr.ord),
-            residual_stride=residual_stride,
-        )
-        rep = detection_report(rec, eps, factor=FACTOR)
-        healths.append(platform_health(rec, kw["p"], COMPUTE_BASE))
-        proto_bytes = sum(v for k, v in res.msg_bytes.items() if k != "data")
-        runs.append({
-            "seed": seed,
-            "terminated": res.terminated,
-            "detected_residual": rep.detected_residual,
-            "true_at_detect": rep.true_at_detect,
-            "overshoot": rep.overshoot,
-            "false_detection": rep.false_detection,
-            "latency_overhead": rep.latency_overhead,
-            "wtime": res.wtime,
-            "k_max": res.k_max,
-            "protocol_bytes": proto_bytes,
-            "msg_dropped": res.msg_dropped,
-            "r_star": res.r_star,
-        })
     det = [r for r in runs if r["terminated"]]
     lat = [r["latency_overhead"] for r in det
            if r["latency_overhead"] is not None]
+    over = [r["overshoot"] for r in det if r["overshoot"] is not None]
     # aggregate platform health over all seeds: a fault flagged in any run
     # characterises the scenario
     health = {
-        "silent_workers": sorted({w for h in healths for w in h.silent_workers}),
-        "stragglers": sorted({w for h in healths for w in h.stragglers}),
-        "max_silence": max(h.max_silence for h in healths),
+        "silent_workers": sorted(
+            {w for r in runs for w in r["health"]["silent_workers"]}),
+        "stragglers": sorted(
+            {w for r in runs for w in r["health"]["stragglers"]}),
+        "max_silence": max(r["health"]["max_silence"] for r in runs),
     }
     cell.update({
         "status": "ok",
         "runs": runs,
         "false_rate": float(np.mean([r["false_detection"] for r in runs])),
-        "undetected_rate": float(np.mean([not r["terminated"] for r in runs])),
-        "mean_overshoot_detected": (
-            float(np.mean([r["overshoot"] for r in det])) if det else None),
+        "undetected_rate": float(np.mean([not r["terminated"]
+                                          for r in runs])),
+        "mean_overshoot_detected": float(np.mean(over)) if over else None,
         "mean_latency_overhead": float(np.mean(lat)) if lat else None,
-        "mean_protocol_bytes": float(np.mean([r["protocol_bytes"] for r in runs])),
+        "mean_protocol_bytes": float(np.mean([r["protocol_bytes"]
+                                              for r in runs])),
         "health": health,
     })
     return cell
-
-
-def jsonable(obj):
-    """RFC 8259-safe copy: non-finite floats become None (json.dump would
-    otherwise emit the non-standard Infinity/NaN tokens — undetected runs
-    carry detected_residual/overshoot = inf)."""
-    if isinstance(obj, dict):
-        return {k: jsonable(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [jsonable(v) for v in obj]
-    if isinstance(obj, float) and not np.isfinite(obj):
-        return None
-    return obj
 
 
 def check_acceptance(cells: List[Dict]) -> Dict:
@@ -167,41 +174,75 @@ def main():
                     help="2 scenarios × 2 protocols, 1 seed (CI)")
     ap.add_argument("--out", default="BENCH_reliability.json")
     ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--serial", action="store_true",
+                    help="bypass the campaign: in-process, no cache "
+                         "(speedup reference)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="campaign pool size (default: cpu count)")
+    ap.add_argument("--cache-dir", default=".campaign-cache")
+    ap.add_argument("--baseline-wall", type=float,
+                    default=SERIAL_PR2_BASELINE_S,
+                    help="serial PR-2 runner wall-clock to report the "
+                         "campaign speedup against")
     args = ap.parse_args()
 
-    specs = standard_scenarios(COMPUTE_BASE)
+    specs_by_name = standard_scenarios(COMPUTE_BASE)
     if args.smoke:
         scenario_names = ("stable", "blackout")
         protocols = ("pfait", "nfais2")
         families = ("convdiff", "pagerank")
         seeds = (0,)
     else:
-        scenario_names = tuple(specs)
+        scenario_names = tuple(specs_by_name)
         protocols = PROTOCOLS
         families = tuple(PROBLEMS)
         seeds = tuple(range(args.seeds))
 
-    cells, t0 = [], time.time()
+    specs = run_specs(families, scenario_names, protocols, seeds)
+    t0 = time.time()
+    if args.serial:
+        results = [run_cell_spec(s) for s in specs]
+        hits, recomputed = 0, len(specs)
+    else:
+        camp = campaign.run_campaign(
+            specs,
+            CampaignConfig(cache_dir=args.cache_dir, workers=args.workers,
+                           report_path=args.out + ".partial"),
+        )
+        results = camp.results
+        hits, recomputed = camp.hits, camp.recomputed
+    wall = time.time() - t0
+
+    by_spec = {
+        (s["family"], s["scenario"], s["protocol"], s["seed"]): r
+        for s, r in zip(specs, results)
+    }
+    cells = []
     for family in families:
         for name in scenario_names:
             for protocol in protocols:
-                t1 = time.time()
-                cell = run_matrix_cell(family, protocol, specs[name], seeds)
-                cell["wall_s"] = time.time() - t1
+                runs = [by_spec[(family, name, protocol, s)] for s in seeds]
+                cell = aggregate_cell(family, protocol, name, runs,
+                                      specs_by_name[name])
                 cells.append(cell)
                 if cell["status"] != "ok":
                     print(f"{family:9s} {name:13s} {protocol:8s} "
                           f"-- {cell['status']}")
                     continue
+                over = cell["mean_overshoot_detected"]
+                lat = cell["mean_latency_overhead"]
                 print(f"{family:9s} {name:13s} {protocol:8s} "
                       f"false={cell['false_rate']:.2f} "
                       f"undet={cell['undetected_rate']:.2f} "
-                      f"over={cell['mean_overshoot_detected'] or float('nan'):9.2e} "
-                      f"lat={(cell['mean_latency_overhead'] if cell['mean_latency_overhead'] is not None else float('nan')):8.4f} "
-                      f"pbytes={cell['mean_protocol_bytes']:9.0f} "
-                      f"({cell['wall_s']:.1f}s)")
+                      f"over={(over if over is not None else float('nan')):9.2e} "
+                      f"lat={(lat if lat is not None else float('nan')):8.4f} "
+                      f"pbytes={cell['mean_protocol_bytes']:9.0f}")
 
     acceptance = check_acceptance(cells)
+    # the PR-2 baseline is the full 64-cell matrix: a speedup only means
+    # something for the same workload, cold, through the campaign
+    comparable = not args.smoke and not args.serial
+    speedup = args.baseline_wall / wall if comparable and wall > 0 else None
     report = {
         "cells": cells,
         "acceptance": acceptance,
@@ -211,16 +252,26 @@ def main():
             "compute_base": COMPUTE_BASE,
             "problems": {k: {"kw": v[0], "eps": v[1], "max_iters": v[2]}
                          for k, v in PROBLEMS.items()},
-            "scenarios": {k: specs[k].scenario.describe()
+            "scenarios": {k: specs_by_name[k].scenario.describe()
                           for k in scenario_names},
-            "wall_s": time.time() - t0,
+            "runner": "serial" if args.serial else "campaign",
+            "wall_s": wall,
+            "cache_hits": hits,
+            "recomputed": recomputed,
+            "serial_pr2_baseline_s": args.baseline_wall,
+            "speedup_vs_serial_pr2": speedup,
             "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
         },
     }
-    with open(args.out, "w") as f:
-        json.dump(jsonable(report), f, indent=1, allow_nan=False)
-    print(f"\nwrote {args.out} ({len(cells)} cells, "
-          f"{report['meta']['wall_s']:.0f}s)")
+    write_json_atomic(args.out, report)
+    try:  # the incremental report only matters while the campaign runs
+        os.remove(args.out + ".partial")
+    except OSError:
+        pass
+    vs = (f", {speedup:.2f}x vs serial PR-2 baseline"
+          if speedup is not None else "")
+    print(f"\nwrote {args.out} ({len(cells)} cells, {wall:.1f}s, "
+          f"{hits} cached / {recomputed} recomputed{vs})")
     print(f"acceptance: {acceptance}")
     if not acceptance["ok"]:
         raise SystemExit("reliability acceptance invariants violated")

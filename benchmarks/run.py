@@ -7,6 +7,13 @@ the dry-run artifact if present.
 """
 from __future__ import annotations
 
+import os
+
+# one BLAS thread per process (see reliability_matrix.py) — must precede
+# the first numpy/jax import
+for _v in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS", "MKL_NUM_THREADS"):
+    os.environ.setdefault(_v, "1")
+
 import jax
 
 

@@ -3,30 +3,41 @@
 Expected structure (paper): snapshot protocols keep max r* < ε (consistent/
 near-consistent records); PFAIT's max r* can overshoot ε (inconsistent live
 contributions) — the motivation for the threshold margin.
-"""
-from repro.core.async_engine import unstable_platform
 
-from benchmarks.common import SEEDS, csv_rows, print_rows, run_cell
+Cells run through the campaign runner (benchmarks/campaign.py): cached by
+content, pooled across workers — re-running a table after a doc-only change
+recomputes nothing.
+"""
+from benchmarks.campaign import map_cells
+from benchmarks.common import csv_rows, print_rows
 
 EPS = 1e-6
 PS = (4, 8, 16)
 N = 16
 
 
-def run(verbose: bool = True):
-    rows = []
-    for p in PS:
-        for proto in ("pfait", "nfais2", "nfais5"):
-            rows.append(run_cell(proto, EPS, N, p))
+def specs():
+    out = [
+        {"kind": "table", "protocol": proto, "eps": EPS, "n": N, "p": p}
+        for p in PS
+        for proto in ("pfait", "nfais2", "nfais5")
+    ]
     # platform-stability contrast (paper §5: single-site stability is what
     # makes protocol-free detection viable): PFAIT on an unstable platform
     # overshoots ε — the case the margin must absorb.
-    unstable = []
-    for p in PS:
-        r = run_cell("pfait", EPS, N, p, seeds=tuple(range(8)),
-                     platform=unstable_platform)
+    out += [
+        {"kind": "table", "protocol": "pfait", "eps": EPS, "n": N, "p": p,
+         "seeds": list(range(8)), "platform": "unstable"}
+        for p in PS
+    ]
+    return out
+
+
+def run(verbose: bool = True):
+    all_rows = map_cells(specs())
+    rows, unstable = all_rows[: 3 * len(PS)], all_rows[3 * len(PS):]
+    for r in unstable:
         r["protocol"] = "pfait*"  # * = unstable platform
-        unstable.append(r)
     if verbose:
         print_rows("Table 1 — final residuals, ε=1e-6, n=%d³" % N, rows)
         print_rows("Table 1b — PFAIT on an UNSTABLE platform (overshoot)", unstable)

@@ -1,20 +1,26 @@
 """Table 2: wall-clock (virtual) time and k_max at ε = 1e-6, small problem.
 
 Expected structure (paper): PFAIT ≤ NFAIS2 ≈ NFAIS5 in wtime (no snapshot
-phase, no confirmation), comparable k_max.
+phase, no confirmation), comparable k_max.  Campaign-run (cached, pooled).
 """
-from benchmarks.common import csv_rows, print_rows, run_cell
+from benchmarks.campaign import map_cells
+from benchmarks.common import csv_rows, print_rows
 
 EPS = 1e-6
 PS = (4, 8, 16)
 N = 16
 
 
+def specs():
+    return [
+        {"kind": "table", "protocol": proto, "eps": EPS, "n": N, "p": p}
+        for p in PS
+        for proto in ("pfait", "nfais2", "nfais5")
+    ]
+
+
 def run(verbose: bool = True):
-    rows = []
-    for p in PS:
-        for proto in ("pfait", "nfais2", "nfais5"):
-            rows.append(run_cell(proto, EPS, N, p))
+    rows = map_cells(specs())
     if verbose:
         print_rows("Table 2 — wtime/k_max, ε=1e-6, n=%d³" % N, rows)
         for p in PS:

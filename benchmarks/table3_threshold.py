@@ -2,20 +2,26 @@
 
 Expected structure (paper §4.2): decade thresholds behave predictably;
 the intermediate 4e-7 shows the largest relative overshoot band — and only
-ε = ε̃/10 keeps every run under ε̃ = 1e-6.
+ε = ε̃/10 keeps every run under ε̃ = 1e-6.  Campaign-run (cached, pooled).
 """
-from benchmarks.common import csv_rows, print_rows, run_cell
+from benchmarks.campaign import map_cells
+from benchmarks.common import csv_rows, print_rows
 
 PS = (4, 8, 16)
 N = 16
 EPS_TILDE = 1e-6
 
 
+def specs():
+    return [
+        {"kind": "table", "protocol": "pfait", "eps": eps, "n": N, "p": p}
+        for eps in (1e-6, 4e-7, 1e-7)
+        for p in PS
+    ]
+
+
 def run(verbose: bool = True):
-    rows = []
-    for eps in (1e-6, 4e-7, 1e-7):
-        for p in PS:
-            rows.append(run_cell("pfait", eps, N, p))
+    rows = map_cells(specs())
     if verbose:
         print_rows("Table 3 — PFAIT threshold sensitivity", rows)
         for eps in (1e-6, 4e-7, 1e-7):

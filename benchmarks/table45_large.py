@@ -2,21 +2,30 @@
 
 Expected structure (paper): every PFAIT run satisfies r* < ε̃ (margin holds);
 PFAIT still wins wall-clock while paying extra iterations (later detection
-at the tighter threshold).
+at the tighter threshold).  Campaign-run (cached, pooled).
 """
-from benchmarks.common import csv_rows, print_rows, run_cell
+from benchmarks.campaign import map_cells
+from benchmarks.common import csv_rows, print_rows
 
 EPS_TILDE = 1e-6
 PS = (8, 16, 32)
 N = 24
 
 
-def run(verbose: bool = True):
-    rows = []
+def specs():
+    out = []
     for p in PS:
-        rows.append(run_cell("pfait", EPS_TILDE / 10, N, p))
-        rows.append(run_cell("nfais2", EPS_TILDE, N, p))
-        rows.append(run_cell("nfais5", EPS_TILDE, N, p))
+        out.append({"kind": "table", "protocol": "pfait",
+                    "eps": EPS_TILDE / 10, "n": N, "p": p})
+        out.append({"kind": "table", "protocol": "nfais2",
+                    "eps": EPS_TILDE, "n": N, "p": p})
+        out.append({"kind": "table", "protocol": "nfais5",
+                    "eps": EPS_TILDE, "n": N, "p": p})
+    return out
+
+
+def run(verbose: bool = True):
+    rows = map_cells(specs())
     if verbose:
         print_rows("Tables 4–5 — large problem (PFAIT at ε̃/10)", rows)
         viol = [r for r in rows if r["protocol"] == "pfait" and r["max_r"] >= EPS_TILDE]

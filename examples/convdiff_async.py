@@ -12,7 +12,6 @@ Run:  PYTHONPATH=src python examples/convdiff_async.py
 """
 import dataclasses
 
-import numpy as np
 
 from repro.core.async_engine import AsyncEngine, stable_platform
 from repro.core.protocols import NFAIS2, NFAIS5, PFAIT

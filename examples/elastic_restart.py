@@ -14,13 +14,10 @@ Run:  PYTHONPATH=src python examples/elastic_restart.py
 """
 import tempfile
 
-import jax
-import numpy as np
-
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.launch.train import train
 from repro.runtime.fault_tolerance import HeartbeatMonitor, plan_restart
-from repro.runtime.elastic import remesh, validate_specs
+from repro.runtime.elastic import remesh
 
 
 def main() -> None:

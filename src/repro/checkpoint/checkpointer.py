@@ -60,7 +60,7 @@ class Checkpointer:
         """Snapshot to host, then serialize asynchronously."""
         self.wait()  # at most one in-flight save
         leaves, treedef = jax.tree.flatten(state)
-        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        host_leaves = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
         treedef_repr = str(treedef)
 
         def write():

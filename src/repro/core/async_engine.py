@@ -33,9 +33,10 @@ adversarial-platform scenario (core/scenarios.py) that shapes every sampled
 delay, drops/spikes individual messages, slows workers persistently, or
 pauses them mid-run; ``AsyncEngine(..., recorder=)`` attaches a trace
 recorder (core/reliability.py) observing sweeps, sends/drops, and the
-detection instant — the substrate of the false/late-detection oracle.  Both
-draw from the engine's single RNG stream in event order, so a run remains a
-pure function of ``EngineConfig.seed``.
+detection instant — the substrate of the false/late-detection oracle.  All
+randomness (block-buffered delay draws + scenario effect draws) comes from
+the engine's single RNG stream, so a run remains a pure function of
+``EngineConfig.seed``.
 
 Measured outputs per run (the paper's reported quantities):
   * ``r_star``  — final exact residual r(x̄) at the instant every process
@@ -161,6 +162,37 @@ class DelayModel:
         return np.maximum(s, self.floor)
 
 
+class _BufferedSampler:
+    """Block-buffered scalar draws from a ``DelayModel``.
+
+    The engine's hot loop draws ~4 scalar delays per sweep; one vectorised
+    draw of ``block`` samples amortises numpy's per-call dispatch ~10×.
+    Draws still come from the engine's single RNG stream (a refill consumes
+    ``block`` generator variates at once), so a run remains a pure function
+    of ``EngineConfig.seed`` — the values are the model's distribution
+    exactly, only the stream's *interleaving* with other consumers differs
+    from scalar draws.
+    """
+
+    __slots__ = ("model", "rng", "block", "_buf", "_pos")
+
+    def __init__(self, model: DelayModel, rng: np.random.Generator,
+                 block: int = 1024):
+        self.model = model
+        self.rng = rng
+        self.block = block
+        self._buf = model.sample(rng, block)
+        self._pos = 0
+
+    def __call__(self) -> float:
+        pos = self._pos
+        if pos == self.block:
+            self._buf = self.model.sample(self.rng, self.block)
+            pos = 0
+        self._pos = pos + 1
+        return float(self._buf[pos])
+
+
 @dataclass(frozen=True)
 class EngineConfig:
     compute: DelayModel                    # per-sweep compute duration
@@ -226,7 +258,7 @@ PLATFORMS = {
 # ---------------------------------------------------------------------------
 
 
-@dataclass
+@dataclass(slots=True)
 class Msg:
     src: int
     dst: int
@@ -268,6 +300,32 @@ class AsyncEngine:
         self.protocol = protocol
         self.scenario = cfg.scenario       # core.scenarios.Scenario | None
         self.recorder = recorder           # core.reliability.TraceRecorder | None
+        # per-hook scenario dispatch: skip the per-event call entirely when
+        # no effect shapes that hook (identity hooks draw no RNG, so this
+        # cannot change a run).  Pruning applies ONLY to the stock
+        # effect-composition dispatchers — a Scenario subclass (or
+        # duck-typed object) overriding a hook method itself is always
+        # called, whatever its effects tuple says.
+        sc = cfg.scenario
+
+        def _sc_for(hook: str, effects_attr: str):
+            if sc is None:
+                return None
+            from repro.core.scenarios import Scenario
+
+            if getattr(type(sc), hook, None) is not getattr(Scenario, hook):
+                return sc  # custom hook implementation: never prune
+            return sc if getattr(sc, effects_attr, True) else None
+
+        self._sc_channel = _sc_for("channel_delay", "channel_effects")
+        self._sc_compute = _sc_for("compute_delay", "compute_effects")
+        self._sc_pause = _sc_for("paused_until", "pause_effects")
+        # send-event observer, resolved once: recorders in lite mode
+        # (record_sends=False) skip the per-message callback entirely
+        self._send_observer = (
+            recorder.on_send
+            if recorder is not None and getattr(recorder, "record_sends", True)
+            else None)
         self.rng = np.random.default_rng(cfg.seed)
         p = problem.p
         self.p = p
@@ -279,9 +337,16 @@ class AsyncEngine:
         # per-process state
         self.x: List[np.ndarray] = [problem.init_local(i) for i in range(p)]
         self.deps: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
-        self.k = np.zeros(p, dtype=np.int64)
-        self.speed = 1.0 + cfg.het_factor * self.rng.random(p)  # per-proc slowdown
-        self.stop_time = np.full(p, np.inf)
+        # plain lists, not ndarrays: the event loop reads these hundreds of
+        # thousands of times per run and numpy scalar indexing costs ~5× a
+        # list index
+        self.k: List[int] = [0] * p
+        self.speed = (1.0 + cfg.het_factor * self.rng.random(p)).tolist()
+        self.stop_time: List[float] = [math.inf] * p
+        self._stop_max = math.inf   # max(stop_time), set once at terminate
+        # block-buffered scalar delay draws (hot loop; see _BufferedSampler)
+        self._draw_compute = _BufferedSampler(cfg.compute, self.rng)
+        self._draw_channel = _BufferedSampler(cfg.channel, self.rng)
         # seed dependency views with initial interfaces (standard: x^0 known)
         for i in range(p):
             for j in problem.neighbors(i):
@@ -313,14 +378,14 @@ class AsyncEngine:
         spikes) or return None to drop the message entirely (lossy
         channels).  Dropped messages are accounted in ``msg_dropped`` and
         never delivered."""
-        delay = float(self.cfg.channel.sample(self.rng))
-        if self.scenario is not None:
-            shaped = self.scenario.channel_delay(t, msg.kind, delay, self.rng)
+        delay = self._draw_channel()
+        if self._sc_channel is not None:
+            shaped = self._sc_channel.channel_delay(t, msg.kind, delay, self.rng)
             if shaped is None:
                 msg.send_time = t
                 self.msg_dropped[msg.kind] = self.msg_dropped.get(msg.kind, 0) + 1
-                if self.recorder is not None:
-                    self.recorder.on_send(self, msg, t, None)
+                if self._send_observer is not None:
+                    self._send_observer(self, msg, t, None)
                 return
             delay = float(shaped)
         deliver = t + delay
@@ -337,8 +402,39 @@ class AsyncEngine:
                 msg.nbytes = int(np.asarray(p).nbytes) if p is not None else 16
         self.msg_counts[msg.kind] = self.msg_counts.get(msg.kind, 0) + 1
         self.msg_bytes[msg.kind] = self.msg_bytes.get(msg.kind, 0) + msg.nbytes
-        if self.recorder is not None:
-            self.recorder.on_send(self, msg, t, deliver)
+        if self._send_observer is not None:
+            self._send_observer(self, msg, t, deliver)
+        self.schedule(deliver, "deliver", msg)
+
+    def _send_data(self, i: int, j: int, t: float) -> None:
+        """Data-message send with the payload built lazily *after* the drop
+        decision: under lossy scenarios (interface blackout drops every data
+        message) the interface extraction and Msg construction of a dropped
+        message are pure overhead — the engine never counts their bytes.
+        Draw order (delay, then scenario) matches ``send`` exactly."""
+        delay = self._draw_channel()
+        if self._sc_channel is not None:
+            shaped = self._sc_channel.channel_delay(t, "data", delay, self.rng)
+            if shaped is None:
+                self.msg_dropped["data"] = self.msg_dropped.get("data", 0) + 1
+                if self._send_observer is not None:
+                    self._send_observer(
+                        self, Msg(src=i, dst=j, kind="data", send_time=t),
+                        t, None)
+                return
+            delay = float(shaped)
+        deliver = t + delay
+        if self.cfg.fifo:
+            key = (i, j)
+            deliver = max(deliver, self._fifo_last.get(key, 0.0) + 1e-12)
+            self._fifo_last[key] = deliver
+        payload = self.problem.interface(i, self.x[i], j)
+        msg = Msg(src=i, dst=j, kind="data", payload=payload,
+                  send_time=t, nbytes=payload.nbytes)
+        self.msg_counts["data"] = self.msg_counts.get("data", 0) + 1
+        self.msg_bytes["data"] = self.msg_bytes.get("data", 0) + payload.nbytes
+        if self._send_observer is not None:
+            self._send_observer(self, msg, t, deliver)
         self.schedule(deliver, "deliver", msg)
 
     # -- reduction service ---------------------------------------------------
@@ -353,11 +449,11 @@ class AsyncEngine:
         2·ceil(log2 p)·hop after the last contribution."""
         self.reductions_started += 1
         offsets = self.cfg.channel.sample(self.rng, self.p)
-        if self.scenario is not None:
+        if self._sc_channel is not None:
             # collectives are lossless-but-slow: scenario effects shape the
             # staggered sampling offsets (kind="reduce") but never drop them
             offsets = np.array([
-                shaped if (shaped := self.scenario.channel_delay(
+                shaped if (shaped := self._sc_channel.channel_delay(
                     t, "reduce", float(o), self.rng)) is not None else float(o)
                 for o in offsets
             ])
@@ -390,24 +486,49 @@ class AsyncEngine:
             self.recorder.on_detect(self, t, detected_residual)
         bcast = math.ceil(math.log2(max(self.p, 2))) * self.cfg.hop_latency
         for i in range(self.p):
-            self.stop_time[i] = t + bcast + float(self.cfg.channel.sample(self.rng))
+            self.stop_time[i] = t + bcast + self._draw_channel()
+        self._stop_max = max(self.stop_time)
 
     # -- main loop -------------------------------------------------------------
     def run(self) -> RunResult:
         cfg = self.cfg
         for i in range(self.p):
-            dt = float(cfg.compute.sample(self.rng)) * self.speed[i]
-            if self.scenario is not None:
-                dt = self.scenario.compute_delay(0.0, i, dt, self.rng)
+            dt = self._draw_compute() * self.speed[i]
+            if self._sc_compute is not None:
+                dt = self._sc_compute.compute_delay(0.0, i, dt, self.rng)
             self.schedule(dt, "compute", i)
         self.protocol.on_start(self, 0.0)
 
-        while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
+        # hot-loop locals: the dispatcher pops hundreds of thousands of
+        # events per run, and attribute lookups at that rate are a
+        # measurable slice of every reliability-matrix cell
+        heap = self._heap
+        heappop_, heappush_ = heapq.heappop, heapq.heappush
+        counter = self._counter
+        k, x, deps, stop_time = self.k, self.x, self.deps, self.stop_time
+        speed = self.speed
+        problem = self.problem
+        neighbors = [problem.neighbors(i) for i in range(self.p)]
+        max_iters, max_time = cfg.max_iters, cfg.max_time
+        use_fused, wants_residual = self._use_fused, self._wants_residual
+        update_with_residual = getattr(problem, "update_with_residual", None)
+        update, local_residual = problem.update, problem.local_residual
+        protocol = self.protocol
+        on_iteration, on_data, on_message = (
+            protocol.on_iteration, protocol.on_data, protocol.on_message)
+        recorder = self.recorder
+        sc_pause, sc_compute = self._sc_pause, self._sc_compute
+        draw_compute = self._draw_compute
+        send_data = self._send_data
+        rng = self.rng
+        nan = float("nan")
+
+        while heap:
+            t, _, kind, payload = heappop_(heap)
             self.now = t
-            if t > cfg.max_time:
+            if t > max_time:
                 break
-            if self.detect_time is not None and t > float(np.max(self.stop_time)):
+            if self.detect_time is not None and t > self._stop_max:
                 break
             if (self._exhaust_deadline is not None
                     and self.detect_time is None
@@ -419,69 +540,63 @@ class AsyncEngine:
                 break
             if kind == "compute":
                 i = payload
-                if self.scenario is not None:
-                    resume = self.scenario.paused_until(t, i)
+                if sc_pause is not None:
+                    resume = sc_pause.paused_until(t, i)
                     if resume is not None and resume > t:
                         # mid-run pause: the sweep that would have started
                         # now is deferred to the resume time
-                        self.schedule(resume, "compute", i)
+                        heappush_(heap, (resume, next(counter), "compute", i))
                         continue
-                if t > self.stop_time[i] or self.k[i] >= cfg.max_iters:
-                    if (self.k[i] >= cfg.max_iters
+                if t > stop_time[i] or k[i] >= max_iters:
+                    if (k[i] >= max_iters
                             and self._exhaust_deadline is None
-                            and int(self.k.min()) >= cfg.max_iters):
+                            and min(k) >= max_iters):
                         # grace: let in-flight data drain + a few reduction
                         # rounds sample the final (now frozen) state
                         self._exhaust_deadline = t + 100 * (
-                            self.cfg.channel.base + self.cfg.hop_latency
+                            cfg.channel.base + cfg.hop_latency
                         )
                     continue
-                if self._use_fused:
-                    need_r = (self._wants_residual is None
-                              or self._wants_residual(self, i))
-                    self.x[i], r_i = self.problem.update_with_residual(
-                        i, self.x[i], self.deps[i], need_residual=need_r
+                if use_fused:
+                    need_r = (wants_residual is None
+                              or wants_residual(self, i))
+                    x[i], r_i = update_with_residual(
+                        i, x[i], deps[i], need_residual=need_r
                     )
                     if r_i is None:
-                        r_i = float("nan")  # protocol declared it unused
+                        r_i = nan  # protocol declared it unused
                 else:
-                    self.x[i] = self.problem.update(i, self.x[i], self.deps[i])
-                    r_i = self.problem.local_residual(i, self.x[i], self.deps[i])
-                self.k[i] += 1
-                for j in self.problem.neighbors(i):
-                    self.send(
-                        Msg(src=i, dst=j, kind="data",
-                            payload=self.problem.interface(i, self.x[i], j)),
-                        t,
-                    )
-                if self.recorder is not None:
-                    self.recorder.on_sweep(self, t, i)
-                self.protocol.on_iteration(self, i, t, r_i)
-                dt = float(cfg.compute.sample(self.rng)) * self.speed[i]
-                if self.scenario is not None:
-                    dt = self.scenario.compute_delay(t, i, dt, self.rng)
-                self.schedule(t + dt, "compute", i)
+                    x[i] = update(i, x[i], deps[i])
+                    r_i = local_residual(i, x[i], deps[i])
+                k[i] += 1
+                for j in neighbors[i]:
+                    send_data(i, j, t)
+                if recorder is not None:
+                    recorder.on_sweep(self, t, i)
+                on_iteration(self, i, t, r_i)
+                dt = draw_compute() * speed[i]
+                if sc_compute is not None:
+                    dt = sc_compute.compute_delay(t, i, dt, rng)
+                heappush_(heap, (t + dt, next(counter), "compute", i))
             elif kind == "deliver":
                 msg: Msg = payload
                 if msg.kind == "data":
-                    if t <= self.stop_time[msg.dst]:
-                        self.deps[msg.dst][msg.src] = msg.payload
-                        self.protocol.on_data(self, msg, t)
+                    if t <= stop_time[msg.dst]:
+                        deps[msg.dst][msg.src] = msg.payload
+                        on_data(self, msg, t)
                 else:
-                    self.protocol.on_message(self, msg, t)
+                    on_message(self, msg, t)
             elif kind == "callback":
                 payload(t)
 
-        wtime = (
-            float(np.max(self.stop_time)) if self.detect_time is not None else self.now
-        )
+        wtime = self._stop_max if self.detect_time is not None else self.now
         r_star = self.problem.exact_residual(self.x)
         result = RunResult(
             terminated=self.detect_time is not None,
             detect_time=self.detect_time if self.detect_time is not None else float("inf"),
             wtime=wtime,
-            k_max=int(self.k.max()),
-            k_min=int(self.k.min()),
+            k_max=int(max(self.k)),
+            k_min=int(min(self.k)),
             r_star=float(r_star),
             detected_residual=float(self.detected_residual),
             msg_counts=dict(self.msg_counts),

@@ -32,8 +32,8 @@ pre-reduced contributions).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
+from functools import partial
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -218,3 +218,211 @@ def for_mode(mode: str, eps_tilde: float, margin: float = 10.0, **kw) -> Monitor
     """Monitor config for a protocol head-to-head at target precision ε̃."""
     eps = pfait_threshold(eps_tilde, margin) if mode == "pfait" else eps_tilde
     return MonitorConfig(mode=mode, eps=eps, eps_tilde=eps_tilde, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Batched detection sweeps — one jitted program over (seed × K × m × ε)
+# ---------------------------------------------------------------------------
+#
+# ``step`` monitors ONE configuration; parameter studies (the recursive-
+# doubling sweeps of Zou & Magoulès, the campaign's detection grids) need
+# thousands.  ``batched_monitor`` vmaps a staleness-*dynamic* reimplementation
+# of the same update over every lane: the ring buffer is padded to the grid's
+# max K+1 and indexed ``step mod (K_lane+1)``, so lanes with different
+# pipeline depths share one scan.  Verdicts are bitwise-identical to running
+# ``step`` per configuration (tests/test_batched.py proves it) because every
+# lane performs the same float ops in the same order — the padding slots are
+# simply never read.
+#
+# NFAIS2 lanes use the verifier-free fallback semantics of ``step`` with
+# ``exact_residual_fn=None`` (the candidate's stale value stands in for the
+# blocking verification — a batched program cannot pause one lane to
+# synchronise), which ``step`` documents as NFAIS5-like acceptance.
+
+
+class BatchedVerdict(NamedTuple):
+    """Per-lane outcome, shaped [S, E, K, M] (seed × ε × staleness × m)."""
+
+    converged: jax.Array          # bool — detection fired within T checks
+    detect_step: jax.Array        # i32 — first firing check (-1 if never)
+    detected_residual: jax.Array  # f32 — the (stale) residual that fired
+    verifications: jax.Array      # i32 — NFAIS2 verification count
+
+
+class _LaneState(NamedTuple):
+    ring: jax.Array
+    step: jax.Array
+    persist: jax.Array
+    phase: jax.Array
+    confirm_at: jax.Array
+    converged: jax.Array
+    detected: jax.Array
+    verifications: jax.Array
+    detect_step: jax.Array
+
+
+def _sigma_lane(c: jax.Array, ord: float) -> jax.Array:
+    """Elementwise σ of an already-reduced contribution (res.sigma on a
+    scalar): identity for l=∞, the l-th root otherwise."""
+    if np.isinf(ord):
+        return c
+    if ord == 2.0:
+        return jnp.sqrt(c)
+    return c ** (1.0 / ord)
+
+
+def _lane_step(mode: str, s: _LaneState, g: jax.Array, eps: jax.Array,
+               eps_tilde: jax.Array, K: jax.Array, m: jax.Array) -> _LaneState:
+    """``step`` with traced (per-lane) ε, ε̃, K, m.  Mirrors the per-run
+    update line by line; K is dynamic via mod-(K+1) ring indexing."""
+    L = K + 1
+    idx = jnp.mod(s.step, L)
+    nxt = jnp.mod(s.step + 1, L)
+    visible = jnp.where(K == 0, g, s.ring[nxt])
+    ring = s.ring.at[idx].set(g)
+    below = visible < eps
+    inf = jnp.float32(jnp.inf)
+
+    if mode in ("sync", "pfait"):
+        converged = s.converged | below
+        detected = jnp.where(
+            s.converged, s.detected, jnp.where(below, visible, inf)
+        )
+        return s._replace(
+            ring=ring, step=s.step + 1, converged=converged,
+            detected=detected,
+            detect_step=jnp.where(
+                converged & ~s.converged, s.step, s.detect_step),
+        )
+
+    persist = jnp.where(below, s.persist + 1, 0)
+
+    if mode == "nfais2":
+        candidate = persist >= m
+        fire = candidate & ~s.converged
+        exact = jnp.where(fire, visible, inf)   # verifier-free fallback
+        verified = exact < eps_tilde
+        converged = s.converged | (fire & verified)
+        return s._replace(
+            ring=ring, step=s.step + 1,
+            persist=jnp.where(fire & ~verified, 0, persist),
+            converged=converged,
+            detected=jnp.where(
+                s.converged, s.detected,
+                jnp.where(fire & verified, exact, inf)),
+            verifications=s.verifications + fire.astype(jnp.int32),
+            detect_step=jnp.where(
+                converged & ~s.converged, s.step, s.detect_step),
+        )
+
+    # nfais5 — two-phase persistence confirmation
+    candidate = (persist >= m) & (s.phase == 0)
+    phase = jnp.where(candidate, 1, s.phase)
+    confirm_at = jnp.where(candidate, s.step + m, s.confirm_at)
+    confirming = (s.phase == 1) & (s.step >= s.confirm_at)
+    confirmed = confirming & below & (persist >= 2 * m)
+    failed = confirming & ~confirmed
+    converged = s.converged | confirmed
+    intmax = jnp.int32(jnp.iinfo(jnp.int32).max)
+    return s._replace(
+        ring=ring, step=s.step + 1, persist=persist,
+        phase=jnp.where(failed | confirmed, 0, phase),
+        confirm_at=jnp.where(failed | confirmed, intmax, confirm_at),
+        converged=converged,
+        detected=jnp.where(
+            s.converged, s.detected, jnp.where(confirmed, visible, inf)),
+        detect_step=jnp.where(
+            converged & ~s.converged, s.step, s.detect_step),
+    )
+
+
+@partial(jax.jit, static_argnames=("mode", "ord"))
+def _batched_scan(mode: str, contribs, eps_l, epst_l, K_l, m_l, ring0,
+                  ord: float = 2.0) -> _LaneState:
+    S = contribs.shape[0]
+    nlanes = eps_l.shape[0]
+    zero_i = jnp.zeros((S, nlanes), jnp.int32)
+    state = _LaneState(
+        ring=jnp.broadcast_to(ring0, (S, nlanes) + ring0.shape).astype(
+            jnp.float32),
+        step=zero_i,
+        persist=zero_i,
+        phase=zero_i,
+        confirm_at=jnp.full((S, nlanes), jnp.iinfo(jnp.int32).max, jnp.int32),
+        converged=jnp.zeros((S, nlanes), jnp.bool_),
+        detected=jnp.full((S, nlanes), jnp.inf, jnp.float32),
+        verifications=zero_i,
+        detect_step=jnp.full((S, nlanes), -1, jnp.int32),
+    )
+    lane = partial(_lane_step, mode)
+    # vmap lanes (params vary, g shared), then seeds (g varies, params shared)
+    lanes = jax.vmap(lane, in_axes=(0, None, 0, 0, 0, 0))
+    seeds = jax.vmap(lanes, in_axes=(0, 0, None, None, None, None))
+
+    def body(s, g_t):
+        g = _sigma_lane(g_t.astype(jnp.float32), ord)
+        return seeds(s, g, eps_l, epst_l, K_l, m_l), None
+
+    state, _ = jax.lax.scan(body, state, jnp.asarray(contribs).T)
+    return state
+
+
+def batched_monitor(mode: str, contribs, eps, staleness, persistence,
+                    ord: float = 2.0, eps_tilde=None) -> BatchedVerdict:
+    """Run the detection monitor over a full (seed × ε × K × m) grid in one
+    jitted device program.
+
+    ``contribs`` — f32[S, T]: per-seed series of already globally-reduced
+    contribution sums, one per check (the ``axis_names=None`` convention of
+    ``step``).  ``eps`` [E], ``staleness`` [K] and ``persistence`` [M] are
+    1-D parameter grids (staleness must be concrete — the ring is padded to
+    its max).  ``eps_tilde`` defaults to ``eps`` (the non-PFAIT convention
+    of ``for_mode``).
+
+    Returns a ``BatchedVerdict`` of [S, E, K, M] arrays whose entries are
+    bitwise-identical to running the per-config ``step`` loop.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    eps = np.asarray(eps, dtype=np.float32).reshape(-1)
+    epst = (np.asarray(eps_tilde, dtype=np.float32).reshape(-1)
+            if eps_tilde is not None else eps)
+    if epst.shape != eps.shape:
+        raise ValueError("eps_tilde grid must match eps grid")
+    stal = np.asarray(staleness, dtype=np.int32).reshape(-1)
+    if mode == "sync":
+        stal = np.zeros_like(stal)  # MonitorConfig forces K=0 for sync
+    pers = np.asarray(persistence, dtype=np.int32).reshape(-1)
+    E, K, M = eps.size, stal.size, pers.size
+    eps_g, stal_g, pers_g = np.meshgrid(eps, stal, pers, indexing="ij")
+    epst_g = np.broadcast_to(epst[:, None, None], eps_g.shape)
+    ring0 = jnp.full((int(stal.max()) + 1,), jnp.inf, dtype=jnp.float32)
+    state = _batched_scan(
+        mode, jnp.asarray(contribs, dtype=jnp.float32),
+        jnp.asarray(eps_g.reshape(-1)), jnp.asarray(epst_g.reshape(-1)),
+        jnp.asarray(stal_g.reshape(-1)), jnp.asarray(pers_g.reshape(-1)),
+        ring0, ord=float(ord),
+    )
+    S = np.asarray(contribs).shape[0]
+    shape = (S, E, K, M)
+    return BatchedVerdict(
+        converged=state.converged.reshape(shape),
+        detect_step=state.detect_step.reshape(shape),
+        detected_residual=state.detected.reshape(shape),
+        verifications=state.verifications.reshape(shape),
+    )
+
+
+def contribution_series(step_fn, x0, T: int) -> jax.Array:
+    """[S, T] pre-sweep contribution series from a batched problem step.
+
+    ``step_fn(X) -> (X_next, contrib[S])`` — e.g. the problems'
+    ``update_with_residual_batched`` — scanned T times in one program.
+    """
+
+    def body(X, _):
+        Xn, c = step_fn(X)
+        return Xn, c
+
+    _, cs = jax.lax.scan(body, x0, None, length=int(T))
+    return cs.T

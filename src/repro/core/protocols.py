@@ -35,10 +35,23 @@ from repro.core.residual import combine_contributions
 
 class BaseProtocol:
     name = "base"
+    #: what a detection *claims* (the reliability oracle scores against it):
+    #: "live"     — the live global residual is < ε (PFAIT samples live
+    #:              state; NFAIS5 records approximate, data-free views),
+    #: "recorded" — a recorded consistent global vector has residual < ε
+    #:              (NFAIS2 / Chandy–Lamport carry or pin the actual data;
+    #:              the certified solution is the record, not whatever the
+    #:              live state drifts to before the stop broadcast lands).
+    claim = "live"
 
     def __init__(self, eps: float, ord: float = 2.0):
         self.eps = float(eps)
         self.ord = ord
+
+    def recorded_vector(self):
+        """The recorded global vector backing a "recorded" claim (list of
+        per-worker blocks), or None when the protocol has no record."""
+        return None
 
     def on_start(self, eng: AsyncEngine, t: float) -> None:  # pragma: no cover
         pass
@@ -61,6 +74,17 @@ class BaseProtocol:
     # shared helper: tree-reduction completion latency
     def _reduce_latency(self, eng: AsyncEngine) -> float:
         return 2 * math.ceil(math.log2(max(eng.p, 2))) * eng.cfg.hop_latency
+
+    # shared helper: residual of a *complete* recorded view (snapshot
+    # reduce paths guarantee every neighbour is present, so the problem's
+    # buffered fast path is valid; gated on cfg.fused so the unfused
+    # baseline keeps the seed code path)
+    def _record_residual(self, eng: AsyncEngine, i: int, own, deps) -> float:
+        if eng.cfg.fused:
+            fast = getattr(eng.problem, "local_residual_fast", None)
+            if fast is not None:
+                return fast(i, own, deps)
+        return eng.problem.local_residual(i, own, deps)
 
 
 # ---------------------------------------------------------------------------
@@ -119,11 +143,17 @@ class NFAIS2(BaseProtocol):
     """
 
     name = "nfais2"
+    claim = "recorded"
 
     def __init__(self, eps: float, ord: float = 2.0):
         super().__init__(eps, ord)
         self.round = 0
         self._reset_round_state = True
+
+    def recorded_vector(self):
+        if any(r is None for r in self.rec_own):
+            return None
+        return list(self.rec_own)
 
     def on_start(self, eng: AsyncEngine, t: float) -> None:
         p = eng.p
@@ -174,7 +204,7 @@ class NFAIS2(BaseProtocol):
         self._reducing = True
         contribs = np.array(
             [
-                eng.problem.local_residual(i, self.rec_own[i], self.rec_deps[i])
+                self._record_residual(eng, i, self.rec_own[i], self.rec_deps[i])
                 for i in range(eng.p)
             ]
         )
@@ -298,7 +328,7 @@ class NFAIS5(BaseProtocol):
         self._reducing = True
         contribs = np.array(
             [
-                eng.problem.local_residual(i, self.rec_own[i], self.rec_deps[i])
+                self._record_residual(eng, i, self.rec_own[i], self.rec_deps[i])
                 for i in range(eng.p)
             ]
         )
@@ -327,10 +357,16 @@ class ExactSnapshotFIFO(BaseProtocol):
     delivery makes the cut consistent → the reduced residual is exact."""
 
     name = "exact_snapshot"
+    claim = "recorded"
 
     def __init__(self, eps: float, ord: float = 2.0):
         super().__init__(eps, ord)
         self.round = 0
+
+    def recorded_vector(self):
+        if any(r is None for r in self.rec_own):
+            return None
+        return list(self.rec_own)
 
     def on_start(self, eng: AsyncEngine, t: float) -> None:
         if not eng.cfg.fifo:
@@ -386,7 +422,7 @@ class ExactSnapshotFIFO(BaseProtocol):
         self._reducing = True
         contribs = np.array(
             [
-                eng.problem.local_residual(i, self.rec_own[i], self.rec_deps[i])
+                self._record_residual(eng, i, self.rec_own[i], self.rec_deps[i])
                 for i in range(eng.p)
             ]
         )

@@ -12,7 +12,7 @@ arrays (host / simulator) and inside ``shard_map`` bodies via
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Union
+from typing import Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,57 +33,57 @@ def local_contribution(diff: jax.Array, ord: Ord = 2) -> jax.Array:
     For finite l this is ``Σ|d|^l`` (NOT the root — roots commute with the
     global reduction only if taken after σ); for l=∞ it is ``max|d|``.
     """
-    l = _as_ord(ord)
+    lp = _as_ord(ord)
     a = jnp.abs(diff.astype(jnp.float32))
-    if np.isinf(l):
+    if np.isinf(lp):
         return jnp.max(a) if a.size else jnp.float32(0)
-    if l == 2.0:
+    if lp == 2.0:
         return jnp.sum(a * a)
-    return jnp.sum(a**l)
+    return jnp.sum(a**lp)
 
 
 def sigma(contributions: jax.Array, ord: Ord = 2) -> jax.Array:
     """``σ``: reduce a vector of local contributions to the global residual."""
-    l = _as_ord(ord)
+    lp = _as_ord(ord)
     c = jnp.asarray(contributions)
-    if np.isinf(l):
+    if np.isinf(lp):
         return jnp.max(c)
     s = jnp.sum(c)
-    if l == 2.0:
+    if lp == 2.0:
         return jnp.sqrt(s)
-    return s ** (1.0 / l)
+    return s ** (1.0 / lp)
 
 
 def psum_sigma(contribution: jax.Array, axis_names, ord: Ord = 2) -> jax.Array:
     """σ over mesh axes, for use inside ``shard_map`` — the SPMD analogue of
     the paper's (non-blocking) reduction operation."""
-    l = _as_ord(ord)
-    if np.isinf(l):
+    lp = _as_ord(ord)
+    if np.isinf(lp):
         return jax.lax.pmax(contribution, axis_names)
     s = jax.lax.psum(contribution, axis_names)
-    if l == 2.0:
+    if lp == 2.0:
         return jnp.sqrt(s)
-    return s ** (1.0 / l)
+    return s ** (1.0 / lp)
 
 
 def global_residual(x: jax.Array, fx: jax.Array, ord: Ord = 2) -> jax.Array:
     """Reference (non-distributed) residual ``‖x − f(x)‖_l``."""
-    l = _as_ord(ord)
+    lp = _as_ord(ord)
     d = jnp.abs((x - fx).astype(jnp.float32))
-    if np.isinf(l):
+    if np.isinf(lp):
         return jnp.max(d)
-    if l == 2.0:
+    if lp == 2.0:
         return jnp.sqrt(jnp.sum(d * d))
-    return jnp.sum(d**l) ** (1.0 / l)
+    return jnp.sum(d**lp) ** (1.0 / lp)
 
 
 def combine_contributions(parts: Sequence[float], ord: Ord = 2) -> float:
     """Host-side σ for the event simulator."""
-    l = _as_ord(ord)
+    lp = _as_ord(ord)
     arr = np.asarray(parts, dtype=np.float64)
-    if np.isinf(l):
+    if np.isinf(lp):
         return float(arr.max()) if arr.size else 0.0
     s = float(arr.sum())
-    if l == 2.0:
+    if lp == 2.0:
         return float(np.sqrt(s))
-    return float(s ** (1.0 / l))
+    return float(s ** (1.0 / lp))

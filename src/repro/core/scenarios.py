@@ -181,10 +181,26 @@ class Pause(Effect):
 
 @dataclass(frozen=True)
 class Scenario:
-    """An ordered composition of effects (applied left to right)."""
+    """An ordered composition of effects (applied left to right).
+
+    Effects that leave a hook at the ``Effect`` identity are pruned from
+    that hook's dispatch list at construction (identity hooks draw nothing
+    from the RNG, so pruning cannot change a run) — the engine consults
+    ``channel_effects`` / ``compute_effects`` / ``pause_effects`` to skip
+    per-event scenario calls entirely on hooks no effect shapes.
+    """
 
     name: str = "baseline"
     effects: Tuple[Effect, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "channel_effects", tuple(
+            e for e in self.effects if type(e).channel is not Effect.channel))
+        object.__setattr__(self, "compute_effects", tuple(
+            e for e in self.effects if type(e).compute is not Effect.compute))
+        object.__setattr__(self, "pause_effects", tuple(
+            e for e in self.effects
+            if type(e).paused_until is not Effect.paused_until))
 
     @property
     def lossy(self) -> bool:
@@ -192,7 +208,7 @@ class Scenario:
 
     def channel_delay(self, t: float, kind: str, delay: float,
                       rng: np.random.Generator) -> Optional[float]:
-        for e in self.effects:
+        for e in self.channel_effects:
             delay = e.channel(t, kind, delay, rng)
             if delay is None:
                 return None
@@ -200,13 +216,13 @@ class Scenario:
 
     def compute_delay(self, t: float, worker: int, delay: float,
                       rng: np.random.Generator) -> float:
-        for e in self.effects:
+        for e in self.compute_effects:
             delay = e.compute(t, worker, delay, rng)
         return delay
 
     def paused_until(self, t: float, worker: int) -> Optional[float]:
         resume = None
-        for e in self.effects:
+        for e in self.pause_effects:
             r = e.paused_until(t, worker)
             if r is not None:
                 resume = r if resume is None else max(resume, r)

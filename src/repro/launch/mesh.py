@@ -7,7 +7,7 @@ import; tests and benchmarks see the real (single) device.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

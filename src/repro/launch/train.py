@@ -20,11 +20,9 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs.base import ParallelConfig, ShapeConfig, reduced as reduced_cfg
+from repro.configs.base import ShapeConfig, reduced as reduced_cfg
 from repro.configs.registry import get_arch
 from repro.core import detection
 from repro.data.pipeline import device_batches

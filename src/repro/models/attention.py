@@ -175,7 +175,7 @@ def attention_fwd(
     q_pos = q_offset + jnp.arange(Sq)
 
     def scan_body(carry, blk):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kblk, vblk, blk_idx = blk
         kv_pos = blk_idx * block_kv + jnp.arange(block_kv)
         s = jnp.einsum("bqnph,bknh->bnpqk", qf, kblk)  # [B,N,P,Sq,block]
@@ -187,7 +187,7 @@ def attention_fwd(
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         pexp = jnp.exp(s - m_new[..., None])
-        l_new = l * alpha + pexp.sum(axis=-1)
+        l_new = lsum * alpha + pexp.sum(axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum("bnpqk,bknh->bnpqh", pexp, vblk)
         return (m_new, l_new, acc_new), None
 
@@ -196,10 +196,10 @@ def attention_fwd(
     acc0 = jnp.zeros((B, N, P, Sq, H), jnp.float32)
     kb_t = jnp.moveaxis(kb, 1, 0)  # [nblk, B, block, N, H]
     vb_t = jnp.moveaxis(vb, 1, 0)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         scan_body, (m0, l0, acc0), (kb_t, vb_t, jnp.arange(nblk))
     )
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = acc / jnp.maximum(lsum[..., None], 1e-30)
     return jnp.moveaxis(out, 3, 1).astype(q.dtype)  # [B,Sq,N,P,H]
 
 
@@ -251,7 +251,7 @@ def attention_fwd_pairs(
     vf = jnp.moveaxis(v, 1, 2).astype(jnp.float32)
 
     def body(carry, pij):
-        m, l, acc = carry
+        m, lsum, acc = carry
         i, j = pij
         qb = jax.lax.dynamic_slice_in_dim(qf, i * block_q, block_q, axis=3)
         kb = jax.lax.dynamic_slice_in_dim(kf, j * block_kv, block_kv, axis=2)
@@ -266,7 +266,7 @@ def attention_fwd_pairs(
             mask &= kv_pos[None, :] > (q_pos[:, None] - window)
         s = jnp.where(mask[None, None, None], s, NEG_INF)
         m_old = jax.lax.dynamic_slice_in_dim(m, i * block_q, block_q, axis=3)
-        l_old = jax.lax.dynamic_slice_in_dim(l, i * block_q, block_q, axis=3)
+        l_old = jax.lax.dynamic_slice_in_dim(lsum, i * block_q, block_q, axis=3)
         a_old = jax.lax.dynamic_slice_in_dim(acc, i * block_q, block_q, axis=3)
         m_new = jnp.maximum(m_old, s.max(axis=-1))
         alpha = jnp.exp(m_old - m_new)
@@ -274,15 +274,15 @@ def attention_fwd_pairs(
         l_new = l_old * alpha + p.sum(axis=-1)
         a_new = a_old * alpha[..., None] + jnp.einsum("bnpqk,bnkh->bnpqh", p, vb)
         m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * block_q, axis=3)
-        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * block_q, axis=3)
+        lsum = jax.lax.dynamic_update_slice_in_dim(lsum, l_new, i * block_q, axis=3)
         acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, i * block_q, axis=3)
-        return (m, l, acc), None
+        return (m, lsum, acc), None
 
     m0 = jnp.full((B, N, P, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, N, P, Sq), jnp.float32)
     acc0 = jnp.zeros((B, N, P, Sq, H), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (pi, pj))
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    (m, lsum, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (pi, pj))
+    out = acc / jnp.maximum(lsum[..., None], 1e-30)
     return jnp.moveaxis(out, 3, 1).astype(q.dtype)
 
 

@@ -6,11 +6,10 @@ arrays in the config dtype.  All code paths work under jit / scan / shard_map.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def dtype_of(name: str):

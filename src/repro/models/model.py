@@ -14,10 +14,7 @@ stop-decision never fences the step. The host polls the on-device
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,14 +26,8 @@ from repro.core import detection
 from repro.models import attention as attn_mod
 from repro.models import layers as L
 from repro.models import ssm as ssm_mod
-from repro.models.transformer import (
-    LayerCtx,
-    ModelPlan,
-    forward,
-    init_params,
-    make_plan,
-)
-from repro.optim.adamw import AdamState, AdamW, apply_updates, global_norm
+from repro.models.transformer import LayerCtx, forward, init_params, make_plan
+from repro.optim.adamw import AdamState, AdamW, apply_updates
 
 
 class TrainState(NamedTuple):
@@ -212,9 +203,13 @@ class Model:
                 spec = P(*lead, *([None] * (x.ndim - len(lead))))
                 return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
-            c_act = lambda x: _c(x, dp, None)
-            c_head = lambda x: _c(x, dp, None, "model")
-            c_ffn = lambda x: _c(x, dp, None, "model")
+            def c_act(x):
+                return _c(x, dp, None)
+
+            def c_head(x):
+                return _c(x, dp, None, "model")
+
+            c_ffn = c_head
         return LayerCtx(
             plan=self.plan,
             mode=mode,

@@ -26,7 +26,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.layers import ceil_to
 

@@ -11,7 +11,6 @@ GSPMD-implicit (f32-wire) reduction so both variants are measurable.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

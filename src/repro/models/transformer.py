@@ -11,9 +11,7 @@ alternates dense/MoE), so parameter stacks have leading dim
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -33,7 +33,8 @@ class AdamW:
         return jnp.dtype(self.moment_dtype) if self.moment_dtype else p.dtype
 
     def init(self, params) -> AdamState:
-        zeros = lambda p: jnp.zeros(p.shape, self._mdtype(p))
+        def zeros(p):
+            return jnp.zeros(p.shape, self._mdtype(p))
         return AdamState(
             step=jnp.zeros((), jnp.int32),
             m=jax.tree.map(zeros, params),
@@ -59,7 +60,8 @@ class AdamW:
             return {"u": (-lr * delta).astype(p.dtype),
                     "m": m_new.astype(m.dtype), "v": v_new.astype(v.dtype)}
 
-        is_rec = lambda x: isinstance(x, dict) and set(x) == {"u", "m", "v"}
+        def is_rec(x):
+            return isinstance(x, dict) and set(x) == {"u", "m", "v"}
         treedef = jax.tree.structure(grads)
         out = jax.tree.map(upd, grads, state.m, state.v, params)
         flat = jax.tree.leaves(out, is_leaf=is_rec)
@@ -75,7 +77,7 @@ def apply_updates(params, updates):
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(leaf.astype(jnp.float32) ** 2) for leaf in leaves))
 
 
 def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):

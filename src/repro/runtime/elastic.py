@@ -8,7 +8,7 @@ validated here before any data movement.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np

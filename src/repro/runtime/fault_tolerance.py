@@ -16,7 +16,6 @@ made safe by a calibrated margin) shapes three runtime policies:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -93,27 +92,76 @@ def health_from_sweeps(
     straggler_persistence: int = 3,
     check_every: int = 64,
 ) -> PlatformHealth:
-    """Replay ``(t, worker)`` sweep events through HeartbeatMonitor +
-    StragglerPolicy, exactly as a production control loop would consume
-    live heartbeats — but offline, against a recorded trace."""
-    hb = HeartbeatMonitor(timeout=timeout)
-    sp = StragglerPolicy(factor=straggler_factor,
-                         persistence=straggler_persistence)
-    for w in range(p):
-        hb.beat(w, 0.0)
-    last = {w: 0.0 for w in range(p)}
-    silent, straggle = set(), set()
+    """Replay ``(t, worker)`` sweep events through the HeartbeatMonitor +
+    StragglerPolicy semantics, exactly as a production control loop would
+    consume live heartbeats — but offline, against a recorded trace.
+
+    The replay is vectorised (the event-by-event loop was ~10% of a
+    reliability-matrix cell): verdicts are identical to feeding the events
+    one at a time through the dataclass policies above, which remain the
+    live-control-loop API.
+    """
+    if not sweeps:
+        return PlatformHealth(silent_workers=(), stragglers=(),
+                              max_silence=0.0)
+    times = np.asarray([t for t, _ in sweeps], dtype=np.float64)
+    workers = np.asarray([w for _, w in sweeps], dtype=np.int64)
+    n = times.shape[0]
+
+    # -- heartbeat replay ---------------------------------------------------
+    # At every event the monitor checks t − last_beat[w] > timeout for ALL
+    # workers before the sweeping worker beats.  Event times are
+    # non-decreasing, so within one inter-beat segment of worker w the check
+    # is tightest at the last event of the segment: w is silent iff some
+    # consecutive-beat gap (with a virtual beat at t=0) exceeds timeout, or
+    # the trace outlives w's final beat by more than timeout.
+    silent = []
     max_gap = 0.0
-    for idx, (t, w) in enumerate(sweeps):
-        gap = t - last[w]
-        max_gap = max(max_gap, gap)
-        sp.record(w, gap)
-        silent.update(hb.failed(t))
-        hb.beat(w, t)
-        last[w] = t
-        if idx % check_every == check_every - 1:
-            straggle.update(sp.check())
-    straggle.update(sp.check())
+    beat_idx = [np.flatnonzero(workers == w) for w in range(p)]
+    for w in range(p):
+        beats = np.concatenate([[0.0], times[beat_idx[w]]])
+        gaps = np.diff(beats)
+        own_gap = float(gaps.max()) if gaps.size else 0.0
+        # max_silence mirrors the loop replay: only gaps observed at w's own
+        # sweeps count (the tail after the final beat is a *failed* check,
+        # not a recorded gap)
+        max_gap = max(max_gap, own_gap)
+        if own_gap > timeout or times[-1] - beats[-1] > timeout:
+            silent.append(w)
+
+    # -- straggler replay ---------------------------------------------------
+    # StragglerPolicy keeps the last `window` inter-sweep gaps per worker and
+    # is checked every `check_every` events plus once at the end; a worker is
+    # flagged after `persistence` consecutive over-median checks.
+    window = StragglerPolicy.window
+    gap_seq = [np.diff(np.concatenate([[0.0], times[beat_idx[w]]]))
+               for w in range(p)]
+    # number of gaps worker w has recorded after the first k+1 events:
+    # cumulative count of w's occurrences
+    counts = np.zeros((p, n), dtype=np.int64)
+    for w in range(p):
+        counts[w] = np.cumsum(workers == w)
+    check_points = list(range(check_every - 1, n, check_every)) + [n - 1]
+    straggle = set()
+    consec = np.zeros(p, dtype=np.int64)
+    for idx in check_points:
+        have = counts[:, idx]
+        if not have.any():
+            continue
+        medians = np.full(p, np.nan)
+        for w in range(p):
+            c = have[w]
+            if c:
+                medians[w] = np.median(gap_seq[w][max(0, c - window):c])
+        seen = ~np.isnan(medians)
+        global_p50 = float(np.median(medians[seen]))
+        over = seen & (medians > straggler_factor * global_p50)
+        # workers with no recorded gap yet have over=False and a counter
+        # that is still 0, so the reset below cannot differ from the
+        # event-by-event policy (which never touched them)
+        consec = np.where(over, consec + 1, 0)
+        straggle.update(int(w) for w in np.flatnonzero(
+            seen & (consec >= straggler_persistence)))
     return PlatformHealth(
         silent_workers=tuple(sorted(silent)),
         stragglers=tuple(sorted(straggle)),

@@ -71,18 +71,33 @@ class Stencil:
         inv_dt = 6.0 * d * (1.0 - rho) / rho
         return Stencil.convdiff(n, nu, a, dt=1.0 / inv_dt)
 
-    def offdiag_apply(self, g: np.ndarray) -> np.ndarray:
-        """Σ_offdiag a_ij x_j over a ghosted block g[(bx+2, by+2, bz+2)]."""
-        s = np.stack([
+    def offdiag_apply(self, g: np.ndarray, scratch: np.ndarray = None,
+                      out: np.ndarray = None) -> np.ndarray:
+        """Σ_offdiag a_ij x_j over a ghosted block g[(bx+2, by+2, bz+2)].
+
+        ``scratch`` — optional preallocated (6, bx, by, bz) plane stack and
+        ``out`` — optional result buffer: hot-loop callers (the event
+        simulator runs this tens of thousands of times on tiny blocks, where
+        ``np.stack``'s allocation dominates) pass per-problem buffers.
+        """
+        planes = (
             g[:-2, 1:-1, 1:-1], g[2:, 1:-1, 1:-1],
             g[1:-1, :-2, 1:-1], g[1:-1, 2:, 1:-1],
             g[1:-1, 1:-1, :-2], g[1:-1, 1:-1, 2:],
-        ])
-        return np.einsum("c,cxyz->xyz", self._offc, s)
+        )
+        if scratch is None:
+            s = np.stack(planes)
+        else:
+            for k in range(6):
+                np.copyto(scratch[k], planes[k])
+            s = scratch
+        return np.einsum("c,cxyz->xyz", self._offc, s, out=out)
 
-    def residual_block(self, g: np.ndarray, b: np.ndarray) -> np.ndarray:
+    def residual_block(self, g: np.ndarray, b: np.ndarray,
+                       scratch: np.ndarray = None) -> np.ndarray:
         """b − A x over a ghosted block (rows owned by the block)."""
-        return b - (self.diag * g[1:-1, 1:-1, 1:-1] + self.offdiag_apply(g))
+        return b - (self.diag * g[1:-1, 1:-1, 1:-1]
+                    + self.offdiag_apply(g, scratch=scratch))
 
     def jacobi_sweep(self, g: np.ndarray, b: np.ndarray) -> np.ndarray:
         """One Jacobi sweep: returns the new interior block (no ghosts)."""
@@ -201,12 +216,27 @@ class ConvDiffProblem:
         self._cidx: List[Tuple[np.ndarray, np.ndarray]] = []
         self._cnidx: List[Tuple[np.ndarray, np.ndarray]] = []
         self._cb: List[Tuple[np.ndarray, np.ndarray]] = []
+        self._cpos0: List[np.ndarray] = []   # color-0 positions in block order
+        self._bflat: List[np.ndarray] = []   # contiguous flat rhs per worker
         sx, sy = (by + 2) * (bz + 2), bz + 2
         noffs = np.array([-sx, sx, -sy, sy, -1, 1])  # xm xp ym yp zm zp
         ixg = np.arange(bx)[:, None, None]
         iyg = np.arange(by)[None, :, None]
         izg = np.arange(bz)[None, None, :]
         flat = ((ixg + 1) * (by + 2) + (iyg + 1)) * (bz + 2) + (izg + 1)
+        # every interior cell's 6 neighbour flat indices (shared by all
+        # workers — block shapes are uniform): one fancy gather + one
+        # (6,)·(6, n_block) matvec is the fastest full off-diagonal apply
+        # at event-sim block sizes.  The gather/result scratch buffers kill
+        # the per-sweep allocations (~30% of the sweep at n=12 blocks);
+        # calls are serialised within a simulator process and every result
+        # is consumed before the next sweep.
+        self._nidx_full = flat.ravel()[None, :] + noffs[:, None]
+        nblock = bx * by * bz
+        self._take6 = np.empty((6, nblock))          # full 6-plane gather
+        self._take6h = np.empty((6, (nblock + 1) // 2))  # half-grid gather
+        self._offbuf = np.empty(nblock)              # full off-diag result
+        self._rbuf = np.empty(nblock)                # pre-sweep residual
         for i in range(self.p):
             ox, oy = self.part.offsets(i)
             self._b.append(self.b_global[ox : ox + bx, oy : oy + by, :])
@@ -222,6 +252,8 @@ class ConvDiffProblem:
             self._cidx.append(idx)
             self._cnidx.append(tuple(c[None, :] + noffs[:, None] for c in idx))
             self._cb.append(tuple(self._b[i][m] for m in (~par, par)))
+            self._cpos0.append(np.flatnonzero(~par.ravel()))
+            self._bflat.append(np.ascontiguousarray(self._b[i]).reshape(-1))
 
     # -- DecomposedProblem interface ----------------------------------------
     def neighbors(self, i: int) -> List[int]:
@@ -283,28 +315,48 @@ class ConvDiffProblem:
         when ``need_residual`` is False (protocol won't consume it).
         """
         st = self.st
-        b = self._b[i]
         g = self._fill_ghost(i, x_i, deps)
+        gf = g.reshape(-1)
+        coefs, inv_diag = st._offc, 1.0 / st.diag
         if self.sweep == "jacobi":
-            off = st.offdiag_apply(g)
-            r = (b - (st.diag * x_i + off)) if need_residual else None
-            x_new = (b - off) / st.diag
+            bflat = self._bflat[i]
+            np.take(gf, self._nidx_full, out=self._take6)
+            off = np.matmul(coefs, self._take6, out=self._offbuf)
+            r = (bflat - st.diag * x_i.reshape(-1) - off) if need_residual \
+                else None
+            x_new = ((bflat - off) * inv_diag).reshape(x_i.shape)
         elif not need_residual:
             # checkerboard-slice sweep: per color, one fancy gather of the
             # 6 neighbour planes + one matvec — touches only the half-grid
             # being updated (the PFAIT hot path: no residual consumer).
-            gf = g.reshape(-1)
-            coefs, inv_diag = st._offc, 1.0 / st.diag
             for c in (0, 1):
-                off_c = coefs @ gf[self._cnidx[i][c]]
+                take = np.take(gf, self._cnidx[i][c],
+                               out=self._take6h[:, : self._cidx[i][c].size])
+                off_c = coefs @ take
                 gf[self._cidx[i][c]] = (self._cb[i][c] - off_c) * inv_diag
             return g[1:-1, 1:-1, 1:-1].copy(), None
         else:
-            ox, oy = self.part.offsets(i)
-            x_new, r = st.redblack_gs_sweep_residual(
-                g, b, ox, oy, parity=self._parity[i], need_residual=True
-            )
-            x_new = x_new.copy()  # buffer interior is reused next sweep
+            # fused hybrid sweep, all flat: ONE full off-diagonal gather
+            # (doubles as the pre-sweep residual term and color 0's Jacobi
+            # view), then a half-grid gather for color 1 — instead of the
+            # two full applies ``Stencil.redblack_gs_sweep_residual`` pays.
+            bflat = self._bflat[i]
+            np.take(gf, self._nidx_full, out=self._take6)
+            off = np.matmul(coefs, self._take6, out=self._offbuf)
+            # r = b − diag·x − off, allocation-free (reduced to a scalar
+            # before the buffer is reused)
+            r = np.multiply(x_i.reshape(-1), st.diag, out=self._rbuf)
+            np.subtract(bflat, r, out=r)
+            r -= off
+            # color 0 (even): Jacobi against the frozen view
+            pos0 = self._cpos0[i]
+            gf[self._cidx[i][0]] = (self._cb[i][0] - off[pos0]) * inv_diag
+            # color 1 (odd): sees same-sweep color-0 updates + frozen ghosts
+            take = np.take(gf, self._cnidx[i][1],
+                           out=self._take6h[:, : self._cidx[i][1].size])
+            off_c = coefs @ take
+            gf[self._cidx[i][1]] = (self._cb[i][1] - off_c) * inv_diag
+            x_new = g[1:-1, 1:-1, 1:-1].copy()  # buffer reused next sweep
         if not need_residual:
             return x_new, None
         if np.isinf(self.ord):
@@ -313,10 +365,12 @@ class ConvDiffProblem:
 
     def local_residual_fast(self, i: int, x_i: np.ndarray,
                             deps: Dict[int, np.ndarray]) -> float:
-        """``local_residual`` via the preallocated ghost buffer (used by the
-        engine's reduction sampling on the fused path)."""
+        """``local_residual`` via the preallocated ghost buffer and the flat
+        gather apply (used by the engine's reduction sampling on the fused
+        path — PFAIT samples it at every staggered reduction slot)."""
         g = self._fill_ghost(i, x_i, deps)
-        r = self.st.residual_block(g, self._b[i])
+        off = self.st._offc @ g.reshape(-1).take(self._nidx_full)
+        r = self._bflat[i] - self.st.diag * x_i.reshape(-1) - off
         if np.isinf(self.ord):
             return float(np.max(np.abs(r)))
         return float(np.sum(r * r))
@@ -337,13 +391,73 @@ class ConvDiffProblem:
         return float(np.sum(r * r))
 
     def exact_residual(self, xs: Sequence[np.ndarray]) -> float:
-        u = self.assemble(xs)
-        g = np.zeros((self.n + 2,) * 3)
-        g[1:-1, 1:-1, 1:-1] = u
-        r = self.st.residual_block(g, self.b_global)
+        # preallocated global ghost grid + plane scratch: the reliability
+        # lab samples the exact trajectory every residual_stride sweeps, so
+        # this runs ~10³ times per traced run (ghost faces are Dirichlet
+        # zeros and stay zero; the interior is fully overwritten each call)
+        g = getattr(self, "_gexact", None)
+        if g is None:
+            g = self._gexact = np.zeros((self.n + 2,) * 3)
+            self._sexact = np.empty((6, self.n, self.n, self.n))
+        bx, by, _ = self.part.block
+        u = g[1:-1, 1:-1, 1:-1]
+        for i in range(self.p):
+            ox, oy = self.part.offsets(i)
+            u[ox : ox + bx, oy : oy + by, :] = xs[i]
+        r = self.st.residual_block(g, self.b_global, scratch=self._sexact)
         if np.isinf(self.ord):
             return float(np.max(np.abs(r)))
         return float(np.sqrt(np.sum(r * r)))
+
+    # -- batched device path -------------------------------------------------
+    def update_with_residual_batched(self, X, b=None):
+        """Synchronous global sweep + pre-sweep residual contribution for a
+        whole batch of lanes, as one jittable device program.
+
+        ``X`` — f32/f64[B, n, n, n] lane states (B = seeds or restarts);
+        ``b`` — optional rhs, [n, n, n] or [B, n, n, n] (defaults to this
+        instance's; pass a stacked array for seed-batched lanes).  Returns
+        ``(X_next, contrib[B])`` with the same fused semantics as
+        ``update_with_residual``: the contribution is the residual of the
+        *input* state under the repo convention (max|r| for ord=∞, Σr²
+        otherwise).  ``sweep`` follows the instance: one Jacobi sweep, or
+        the hybrid red-black GS pair of half-sweeps.  Composes with
+        ``jax.lax.scan`` / ``core.detection.contribution_series`` so whole
+        (seed × K × m × ε) detection grids run as single programs.
+        """
+        import jax.numpy as jnp
+
+        st = self.st
+        if b is None:
+            b = self.b_global
+        b = jnp.asarray(b)
+
+        def offdiag(Xp):
+            g = jnp.pad(Xp, ((0, 0), (1, 1), (1, 1), (1, 1)))
+            return (st.xm * g[:, :-2, 1:-1, 1:-1]
+                    + st.xp * g[:, 2:, 1:-1, 1:-1]
+                    + st.ym * g[:, 1:-1, :-2, 1:-1]
+                    + st.yp * g[:, 1:-1, 2:, 1:-1]
+                    + st.zm * g[:, 1:-1, 1:-1, :-2]
+                    + st.zp * g[:, 1:-1, 1:-1, 2:])
+
+        off = offdiag(X)
+        r = b - (st.diag * X + off)
+        if self.sweep == "jacobi":
+            X_next = (b - off) / st.diag
+        else:
+            n = X.shape[-1]
+            ix = jnp.arange(X.shape[1])[:, None, None]
+            iy = jnp.arange(X.shape[2])[None, :, None]
+            iz = jnp.arange(n)[None, None, :]
+            parity = ((ix + iy + iz) % 2).astype(bool)
+            even = jnp.where(~parity, (b - off) / st.diag, X)
+            X_next = jnp.where(parity, (b - offdiag(even)) / st.diag, even)
+        if np.isinf(self.ord):
+            contrib = jnp.max(jnp.abs(r), axis=(1, 2, 3))
+        else:
+            contrib = jnp.sum(r * r, axis=(1, 2, 3))
+        return X_next, contrib
 
     # -- helpers -------------------------------------------------------------
     def assemble(self, xs: Sequence[np.ndarray]) -> np.ndarray:

@@ -30,15 +30,13 @@ The paper's runtime, mapped to an SPMD pod:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import detection
 from repro.core import residual as res
@@ -203,15 +201,16 @@ def make_sharded_solver(cfg: SolverConfig, mesh: Mesh, ax_x: str = "data", ax_y:
             ghosts = halo_exchange(x, ax_x_t, ax_y_t, nx, ny)
             if contrib is None:  # unfused baseline: post-exchange second pass
                 contrib = _local_contribution(cfg, ghosted(x, ghosts), b)
-                exact_fn = lambda: res.psum_sigma(contrib, axis_names,
-                                                  mon_cfg.ord)
+                def exact_fn(c=contrib):
+                    return res.psum_sigma(c, axis_names, mon_cfg.ord)
             else:
                 # fused contrib is one sweep stale; NFAIS2's exact
                 # verification must measure the fresh post-exchange state
                 # (paid lazily under its lax.cond).
-                exact_fn = lambda: res.psum_sigma(
-                    _local_contribution(cfg, ghosted(x, ghosts), b),
-                    axis_names, mon_cfg.ord)
+                def exact_fn(x=x, ghosts=ghosts):
+                    return res.psum_sigma(
+                        _local_contribution(cfg, ghosted(x, ghosts), b),
+                        axis_names, mon_cfg.ord)
             mon = detection.step(mon_cfg, mon, contrib, axis_names=axis_names,
                                  exact_residual_fn=exact_fn)
             return x, ghosts, mon, k + 1
@@ -262,11 +261,13 @@ def solve_single(cfg: SolverConfig, b: jax.Array, x0: Optional[jax.Array] = None
         x, contrib = _outer_iteration(cfg, x, _zero_ghosts(x), b, 0, 0)
         if contrib is None:  # unfused baseline: residual-only second pass
             contrib = _local_contribution(cfg, ghosted(x, _zero_ghosts(x)), b)
-            exact_fn = lambda: res.sigma(contrib, mon_cfg.ord)
+            def exact_fn(c=contrib):
+                return res.sigma(c, mon_cfg.ord)
         else:
-            exact_fn = lambda: res.sigma(
-                _local_contribution(cfg, ghosted(x, _zero_ghosts(x)), b),
-                mon_cfg.ord)
+            def exact_fn(x=x):
+                return res.sigma(
+                    _local_contribution(cfg, ghosted(x, _zero_ghosts(x)), b),
+                    mon_cfg.ord)
         mon = detection.step(mon_cfg, mon, contrib, axis_names=None,
                              exact_residual_fn=exact_fn)
         return x, mon, k + 1

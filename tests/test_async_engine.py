@@ -28,7 +28,7 @@ def given_seed(max_examples, fallback_seeds):
             return pytest.mark.parametrize("seed", fallback_seeds)(fn)
     return deco
 
-from repro.core.async_engine import AsyncEngine, DelayModel, EngineConfig, Msg
+from repro.core.async_engine import AsyncEngine, DelayModel, EngineConfig
 from repro.core.protocols import PFAIT
 from repro.solvers.convdiff import ConvDiffProblem
 
@@ -116,7 +116,7 @@ def test_heterogeneous_progress():
     """card{k : i ∈ P(k)} grows for every worker, at different rates."""
     prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=2)
     eng = AsyncEngine(prob, _cfg(11, het=1.0), PFAIT(1e-7, ord=prob.ord))
-    r = eng.run()
+    eng.run()
     assert int(np.min(eng.k)) > 0
     assert int(np.max(eng.k)) > int(np.min(eng.k))  # genuinely asynchronous
 

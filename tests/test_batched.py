@@ -1,0 +1,190 @@
+"""Batched detection sweeps: bitwise parity with the per-run monitor, and
+batched problem entry points vs their per-worker numpy references.
+
+The headline invariant (PR-3 acceptance): ``detection.batched_monitor``
+verdicts — converged flag, detection step, detected residual bits — are
+IDENTICAL to driving ``detection.step`` one configuration at a time over
+the same contribution series.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import detection
+from repro.solvers.convdiff import ConvDiffProblem
+from repro.solvers.pagerank import PageRankProblem
+
+EPS_GRID = [3e-3, 1e-4]
+K_GRID = [0, 1, 3]
+M_GRID = [1, 2, 4]
+
+
+def _series(S=3, T=160, seed=0):
+    """Decaying contribution series with noise and eps-crossing jitter."""
+    rng = np.random.default_rng(seed)
+    base = np.exp(-0.06 * np.arange(T))[None, :]
+    noise = 1.0 + 0.5 * rng.random((S, T))
+    return (base * noise * 1e-1).astype(np.float32)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _reference_loop(cfg, series):
+    """Per-run monitor over one config: scan of ``detection.step``."""
+
+    def body(st, g):
+        st2 = detection.step(cfg, st, g)
+        return st2, st2.converged & ~st.converged
+
+    st, newly = jax.lax.scan(body, detection.init_state(cfg), series)
+    detect_step = jnp.where(newly.any(), jnp.argmax(newly), -1)
+    return st.converged, detect_step.astype(jnp.int32), st.detected_residual
+
+
+@pytest.mark.parametrize("mode", detection.MODES)
+def test_batched_monitor_bitwise_matches_per_run_loop(mode):
+    contribs = _series()
+    v = detection.batched_monitor(
+        mode, contribs, EPS_GRID, K_GRID, M_GRID, ord=2.0
+    )
+    for si in range(contribs.shape[0]):
+        for ei, eps in enumerate(EPS_GRID):
+            for ki, K in enumerate(K_GRID):
+                for mi, m in enumerate(M_GRID):
+                    cfg = detection.MonitorConfig(
+                        mode=mode, eps=float(eps), eps_tilde=float(eps),
+                        staleness=int(K), persistence=int(m), ord=2.0,
+                    )
+                    conv, dstep, detected = _reference_loop(
+                        cfg, jnp.asarray(contribs[si])
+                    )
+                    lane = (si, ei, ki, mi)
+                    assert bool(v.converged[lane]) == bool(conv), lane
+                    assert int(v.detect_step[lane]) == int(dstep), lane
+                    # bitwise: f32 payloads identical (inf == inf included)
+                    a = np.float32(v.detected_residual[lane])
+                    b = np.float32(detected)
+                    assert a.tobytes() == b.tobytes(), (lane, a, b)
+
+
+def test_batched_monitor_grid_covers_convergence_transition():
+    """Sanity on the verdict structure: tighter ε detects later (or not at
+    all), and every converged lane carries a finite detected residual."""
+    contribs = _series(S=2, T=200, seed=3)
+    v = detection.batched_monitor(
+        "pfait", contribs, EPS_GRID, K_GRID, M_GRID, ord=2.0
+    )
+    conv = np.asarray(v.converged)
+    dstep = np.asarray(v.detect_step)
+    detected = np.asarray(v.detected_residual)
+    assert conv.any(), "no lane converged — series too short for the grid"
+    assert np.isfinite(detected[conv]).all()
+    assert (dstep[conv] >= 0).all() and (dstep[~conv] == -1).all()
+    # eps axis 1: EPS_GRID[0] > EPS_GRID[1] ⇒ looser detects no later
+    both = conv[:, 0] & conv[:, 1]
+    assert (dstep[:, 0][both] <= dstep[:, 1][both]).all()
+
+
+def test_sync_mode_forces_zero_staleness_lanes():
+    contribs = _series(S=1, T=80, seed=1)
+    v = detection.batched_monitor(
+        "sync", contribs, [1e-3], [0, 2, 5], [1], ord=2.0
+    )
+    # every K lane behaves as K=0 (MonitorConfig coerces sync to blocking)
+    assert np.unique(np.asarray(v.detect_step)).size == 1
+
+
+# ---------------------------------------------------------------------------
+# batched problem entry points vs per-worker references
+# ---------------------------------------------------------------------------
+
+
+def test_convdiff_batched_step_matches_global_sweep_jacobi():
+    prob = ConvDiffProblem(n=10, p=1, rho=0.9, seed=0, sweep="jacobi")
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((3, 10, 10, 10))
+    Xn, contrib = prob.update_with_residual_batched(jnp.asarray(X))
+    for b in range(3):
+        ref_new, ref_r = prob.update_with_residual(0, X[b], {})
+        assert np.allclose(np.asarray(Xn[b]), ref_new, atol=1e-12)
+        assert np.isclose(float(contrib[b]), ref_r, rtol=1e-12)
+
+
+def test_convdiff_batched_step_matches_global_sweep_hybrid():
+    prob = ConvDiffProblem(n=8, p=1, rho=0.9, seed=1, sweep="hybrid")
+    rng = np.random.default_rng(1)
+    X = rng.standard_normal((2, 8, 8, 8))
+    Xn, contrib = prob.update_with_residual_batched(jnp.asarray(X))
+    for b in range(2):
+        ref_new, ref_r = prob.update_with_residual(0, X[b].copy(), {})
+        assert np.allclose(np.asarray(Xn[b]), ref_new, atol=1e-12)
+        assert np.isclose(float(contrib[b]), ref_r, rtol=1e-12)
+
+
+def test_convdiff_batched_seed_lanes_use_their_own_rhs():
+    probs = [ConvDiffProblem(n=8, p=1, rho=0.9, seed=s) for s in (0, 1)]
+    b = jnp.asarray(np.stack([p.b_global for p in probs]))
+    X = jnp.zeros((2, 8, 8, 8))
+    _, contrib = probs[0].update_with_residual_batched(X, b=b)
+    for s, p in enumerate(probs):
+        _, ref_r = p.update_with_residual(0, np.zeros((8, 8, 8)), {})
+        assert np.isclose(float(contrib[s]), ref_r, rtol=1e-12)
+
+
+def test_pagerank_batched_step_matches_global_apply():
+    prob = PageRankProblem(n=64, p=1, seed=0)
+    rng = np.random.default_rng(2)
+    X = np.abs(rng.standard_normal((3, 64))) / 64
+    Xn, contrib = prob.update_with_residual_batched(jnp.asarray(X))
+    for b in range(3):
+        ref_new, ref_r = prob.update_with_residual(0, X[b], {})
+        assert np.allclose(np.asarray(Xn[b]), ref_new, atol=1e-12)
+        assert np.isclose(float(contrib[b]), ref_r, rtol=1e-12)
+
+
+def test_pagerank_batched_seed_lanes_with_stacked_graphs():
+    probs = [PageRankProblem(n=64, p=1, seed=s) for s in (0, 1)]
+    P = jnp.asarray(np.stack([p.to_dense() for p in probs]))
+    X = jnp.full((2, 64), 1.0 / 64)
+    _, contrib = probs[0].update_with_residual_batched(X, P=P)
+    for s, p in enumerate(probs):
+        _, ref_r = p.update_with_residual(0, np.full(64, 1.0 / 64), {})
+        assert np.isclose(float(contrib[s]), ref_r, rtol=1e-12)
+
+
+def test_contribution_series_matches_stepwise_loop():
+    prob = PageRankProblem(n=64, p=1, seed=0)
+    X0 = jnp.full((2, 64), 1.0 / 64)
+
+    def step_fn(X):
+        return prob.update_with_residual_batched(X)
+
+    series = detection.contribution_series(step_fn, X0, T=10)
+    assert series.shape == (2, 10)
+    X, expect = X0, []
+    for _ in range(10):
+        X, c = step_fn(X)
+        expect.append(np.asarray(c))
+    assert np.allclose(np.asarray(series), np.stack(expect, axis=1), rtol=1e-12)
+
+
+def test_detection_grid_feeds_batched_monitor_end_to_end():
+    """Sweep-grid pipeline: problem scan → monitor grid, one device program
+    per stage; detection tightens monotonically along the eps axis."""
+    prob = ConvDiffProblem(n=8, p=1, rho=0.85, seed=0, sweep="jacobi")
+
+    def step_fn(X):
+        return prob.update_with_residual_batched(X)
+
+    series = detection.contribution_series(
+        step_fn, jnp.zeros((1, 8, 8, 8)), T=300
+    )
+    v = detection.batched_monitor(
+        "pfait", series, [1e-3, 1e-5], [0, 2], [1], ord=prob.ord
+    )
+    conv = np.asarray(v.converged)[0]
+    assert conv.all(), "contraction should cross both thresholds in 300 sweeps"
+    dstep = np.asarray(v.detect_step)[0]
+    assert (dstep[0] <= dstep[1]).all()  # looser eps fires no later

@@ -1,7 +1,6 @@
 """TPU-native convergence monitor: staleness ring + the four modes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import detection, termination

@@ -2,11 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import ModelConfig
 from repro.models import moe as moe_mod
-from repro.models.moe import MoEPlan, moe_init, plan_moe
+from repro.models.moe import moe_init, plan_moe
 from repro.models.transformer import moe_local_reference
 
 
@@ -101,5 +100,5 @@ def test_moe_is_differentiable_through_dispatch():
         return jnp.sum(y**2) + 0.01 * aux
 
     g = jax.grad(loss)(weights)
-    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+    gn = sum(float(jnp.sum(jnp.abs(leaf))) for leaf in jax.tree.leaves(g))
     assert np.isfinite(gn) and gn > 0

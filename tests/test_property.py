@@ -10,8 +10,8 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core import detection
-from repro.core.residual import combine_contributions, local_contribution, sigma
-from repro.models.moe import MoEPlan, moe_init
+from repro.core.residual import combine_contributions, local_contribution
+from repro.models.moe import moe_init
 from repro.models import moe as moe_mod
 
 

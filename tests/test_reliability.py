@@ -11,7 +11,6 @@ import pytest
 from repro.core.async_engine import (
     AsyncEngine,
     DelayModel,
-    EngineConfig,
     PLATFORMS,
     stable_platform,
 )
@@ -24,14 +23,7 @@ from repro.core.reliability import (
     replay_matches,
     run_traced,
 )
-from repro.core.scenarios import (
-    DropMessages,
-    JitterBurst,
-    Pause,
-    Scenario,
-    Straggler,
-    standard_scenarios,
-)
+from repro.core.scenarios import standard_scenarios
 from repro.solvers.convdiff import ConvDiffProblem
 from repro.solvers.pagerank import PageRankProblem
 
@@ -122,7 +114,8 @@ def test_oracle_true_at_detect_matches_live_state():
     """Engine-integrated: the recorder's detection-instant residual equals
     the exact residual of the engine state frozen at that moment (tiny
     2-worker problem so the sweep-event trace is fully inspectable)."""
-    prob_mk = lambda: ConvDiffProblem(n=8, p=2, rho=0.9, seed=1)
+    def prob_mk():
+        return ConvDiffProblem(n=8, p=2, rho=0.9, seed=1)
     cfg = dataclasses.replace(stable_platform(BASE), seed=1, max_iters=4000)
     res, rec = run_traced(prob_mk, cfg, lambda pr: NFAIS2(EPS, ord=pr.ord),
                           residual_stride=10)
@@ -197,7 +190,8 @@ def test_nfais5_error_bounded_by_slack():
     detection within (1 + c(p, m))·ε on a platform that honours its
     staleness assumption."""
     for seed in range(3):
-        prob_mk = lambda: _convdiff(seed)
+        def prob_mk(seed=seed):
+            return _convdiff(seed)
         cfg = dataclasses.replace(stable_platform(BASE), seed=seed,
                                   max_iters=30_000)
         m = 4

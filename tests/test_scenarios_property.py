@@ -35,7 +35,7 @@ def given_seed(max_examples, fallback_seeds):
     return deco
 
 
-from repro.core.async_engine import PLATFORMS, stable_platform
+from repro.core.async_engine import stable_platform
 from repro.core.protocols import NFAIS2, NFAIS5, PFAIT
 from repro.core.reliability import run_traced
 from repro.core.scenarios import (

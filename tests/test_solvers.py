@@ -1,5 +1,4 @@
 """Convection–diffusion solver substrate: numpy sim + JAX distributed."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,12 +5,10 @@ import numpy as np
 import pytest
 
 from repro.models.ssm import (
-    SSMCache,
     causal_conv,
     ssd_chunked,
     ssd_decode_step,
     ssm_apply,
-    ssm_cache_init,
     plan_ssm,
     ssm_init,
 )

@@ -9,7 +9,11 @@ import pytest
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import DataConfig, Prefetcher, synth_batch
 from repro.optim import AdamW, apply_updates, constant_schedule, cosine_schedule
-from repro.optim.grad_compression import ef_compress, ef_init, quantize_int8, dequantize_int8
+from repro.optim.grad_compression import (
+    ef_compress,
+    quantize_int8,
+    dequantize_int8,
+)
 from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerPolicy, plan_restart
 from repro.runtime.elastic import remesh, validate_specs
 

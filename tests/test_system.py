@@ -1,10 +1,6 @@
 """End-to-end behaviour: train-until-target with each detection mode,
 checkpoint/restart continuity, serving, and the paper's protocol ordering."""
-import dataclasses
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.serve import serve
