@@ -19,6 +19,16 @@ Metrics and tolerances (the CI contract):
   - per-cell ``false_rate`` / ``undetected_rate`` — exact (seeded runs are
     deterministic), plus the acceptance invariants must hold.
 
+* ``shard_smoke`` (BENCH_shard_smoke.json):
+  - parity booleans (sync trajectory vs global reference, detection point
+    vs the sharded driver) — exact,
+  - per-cell ``terminated`` / ``false_detection`` of the asynchronous
+    detection matrix — exact (seeded, deterministic device programs),
+  - ``hbm.*.hbm_bytes_per_device_per_iter`` — exact (pinned-jax lowering),
+  - ``walltime.saving_nonblocking_vs_blocking`` — one-sided floor at −30%
+    (median-of-round ratios; shared-runner noise, same contract as
+    ``fused_smoke``'s wall speedup).
+
 Usage:
   python benchmarks/check_regression.py fused_smoke \
       --baseline benchmarks/baselines/BENCH_fused_smoke.json \
@@ -87,9 +97,71 @@ def _reliability_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
     )
 
 
+def _shard_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
+    for fam, brow in sorted(base["parity"].items()):
+        frow = fresh["parity"][fam]
+        yield (
+            f"parity.{fam}.trajectory_ok",
+            float(brow["trajectory_ok"]),
+            float(frow["trajectory_ok"]),
+            "exact",
+            0.0,
+        )
+        if "driver_match" in brow:
+            yield (
+                f"parity.{fam}.driver_match",
+                float(brow["driver_match"]),
+                float(frow["driver_match"]),
+                "exact",
+                0.0,
+            )
+
+    def detect_cells(rep):
+        return {
+            (c["family"], c["reduction"], c["mode"], c["preset"], c["seed"]): c
+            for c in rep["detect"]
+        }
+
+    fresh_cells = detect_cells(fresh)
+    for key, bcell in sorted(detect_cells(base).items()):
+        fcell = fresh_cells[key]
+        name = "/".join(str(k) for k in key)
+        yield (
+            f"detect.{name}.terminated",
+            float(bcell["terminated"]),
+            float(fcell["terminated"]),
+            "exact",
+            0.0,
+        )
+        yield (
+            f"detect.{name}.false_detection",
+            float(bcell["false_detection"]),
+            float(fcell["false_detection"]),
+            "exact",
+            0.0,
+        )
+
+    for red in ("blocking", "nonblocking", "rdoubling"):
+        yield (
+            f"hbm.{red}.hbm_bytes_per_device_per_iter",
+            base["hbm"][red]["hbm_bytes_per_device_per_iter"],
+            fresh["hbm"][red]["hbm_bytes_per_device_per_iter"],
+            "exact",
+            0.0,
+        )
+    yield (
+        "walltime.saving_nonblocking_vs_blocking",
+        base["walltime"]["saving_nonblocking_vs_blocking"],
+        fresh["walltime"]["saving_nonblocking_vs_blocking"],
+        "floor",
+        0.30,
+    )
+
+
 BENCHES = {
     "fused_smoke": _fused_smoke,
     "reliability_smoke": _reliability_smoke,
+    "shard_smoke": _shard_smoke,
 }
 
 

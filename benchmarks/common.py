@@ -17,7 +17,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.async_engine import PLATFORMS, AsyncEngine, stable_platform
-from repro.core.protocols import NFAIS2, NFAIS5, PFAIT, ExactSnapshotFIFO
+from repro.core.protocols import (
+    NFAIS2,
+    NFAIS5,
+    PFAIT,
+    ExactSnapshotFIFO,
+    RecursiveDoublingProtocol,
+)
 from repro.solvers.convdiff import ConvDiffProblem
 
 SEEDS = (0, 1, 2, 3)
@@ -45,6 +51,8 @@ def make_protocol(name: str, eps: float, ord_: float, m: int = 4):
         return NFAIS5(eps, ord=ord_, m=m)
     if name == "exact":
         return ExactSnapshotFIFO(eps, ord=ord_)
+    if name == "rdub":
+        return RecursiveDoublingProtocol(eps, ord=ord_)
     raise KeyError(name)
 
 
@@ -371,3 +379,45 @@ def _cell_fused_sharded(n: int, sweep: str, fuse_residual: bool,
 
     return measure_sharded(n, sweep, fuse_residual,
                            inner_sweeps=inner_sweeps, use_kernel=use_kernel)
+
+
+# -- shard-runtime cells (benchmarks/bench_shard_runtime.py) ----------------
+#
+# All four need a multi-device platform: the bench entry point forces
+# ``--xla_force_host_platform_device_count`` before jax loads; running the
+# kinds elsewhere fails fast in ``make_shard_mesh``.
+
+
+@cell_kind("shard_parity", env=("jax",),
+           cost=lambda s: s.get("n", 16) ** 3 * s.get("max_outer", 500))
+def _cell_shard_parity(**kw) -> Dict:
+    """Synchronous-anchor parity of the shard runtime (trajectory vs the
+    global reference, detection point vs the sharded driver)."""
+    from benchmarks.bench_shard_runtime import shard_parity
+
+    return shard_parity(**kw)
+
+
+@cell_kind("shard_detect", env=("jax",),
+           cost=lambda s: s.get("n", 16) ** 3 * s.get("max_outer", 2000))
+def _cell_shard_detect(**kw) -> Dict:
+    """One asynchronous shard-runtime run, false-detection scored."""
+    from benchmarks.bench_shard_runtime import shard_detect
+
+    return shard_detect(**kw)
+
+
+@cell_kind("shard_timed", cache=False)  # timing cell: always re-measured
+def _cell_shard_timed(**kw) -> Dict:
+    """Wall-clock of one reduction mode at a fixed iteration count."""
+    from benchmarks.bench_shard_runtime import shard_timed
+
+    return shard_timed(**kw)
+
+
+@cell_kind("shard_hbm", env=("jax",))
+def _cell_shard_hbm(**kw) -> Dict:
+    """HLO-derived HBM bytes per outer iteration of one reduction mode."""
+    from benchmarks.bench_shard_runtime import shard_hbm
+
+    return shard_hbm(**kw)

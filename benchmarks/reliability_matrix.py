@@ -200,6 +200,7 @@ def main():
 
     specs = run_specs(families, scenario_names, protocols, seeds)
     t0 = time.time()
+    pool_meta = {"cpu_count": os.cpu_count()}
     if args.serial:
         results = [run_cell_spec(s) for s in specs]
         hits, recomputed = 0, len(specs)
@@ -211,6 +212,14 @@ def main():
         )
         results = camp.results
         hits, recomputed = camp.hits, camp.recomputed
+        # per-box scaling context: the 3× cold-run target only means
+        # something relative to the cores this box actually delivered
+        pool_meta.update({
+            "workers": camp.workers,
+            "executor": camp.executor,
+            "busy_s": camp.busy_s,
+            "pool_scaling": camp.pool_scaling,
+        })
     wall = time.time() - t0
 
     by_spec = {
@@ -260,6 +269,7 @@ def main():
             "recomputed": recomputed,
             "serial_pr2_baseline_s": args.baseline_wall,
             "speedup_vs_serial_pr2": speedup,
+            **pool_meta,
             "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
         },
     }

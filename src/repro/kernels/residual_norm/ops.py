@@ -24,3 +24,36 @@ def diff_norm(a: jax.Array, b: jax.Array, ord: float = float("inf"),
     if linf:
         return jnp.max(parts)
     return jnp.sqrt(jnp.sum(parts))
+
+
+def update_contribution(new: jax.Array, old: jax.Array,
+                        ord: float = 2.0, scale: float = 1.0,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Pre-σ local contribution of ``r = scale · (new − old)``.
+
+    The shard runtime's detection hot path: for relaxations whose residual
+    is the update difference (Jacobi: ``r = diag·(x⁺ − x)``; D-iteration:
+    ``r = f(x) − x``), the contribution is a fused diff-norm of the two
+    states — exactly the kernel's access pattern, with the constant factor
+    hoisted out of the reduction (``|scale|^l · Σ|Δ|^l`` for finite l,
+    ``|scale| · max|Δ|`` for l = ∞).  Kernel partials on TPU (l ∈ {2, ∞});
+    pure-jnp partials elsewhere; generic l falls back to core.residual.
+    """
+    from repro.core import residual as res
+
+    linf = np.isinf(ord)
+    s = abs(float(scale))
+    on_tpu = jax.default_backend() == "tpu"
+    use_interp = False if interpret is None else interpret
+    if (linf or float(ord) == 2.0) and (on_tpu or use_interp):
+        parts = diff_norm_partials(new, old, linf=linf, interpret=use_interp)
+        if linf:
+            return s * jnp.max(parts)
+        return jnp.float32(s * s) * jnp.sum(parts)
+    if linf or float(ord) == 2.0:
+        # off TPU the blockwise partials buy nothing (XLA fuses the flat
+        # reduction; the reshape/partial machinery measurably hurts inside
+        # while_loop bodies) — same reduction, scale still hoisted
+        contrib = res.local_contribution(new - old, ord)
+        return (s if linf else jnp.float32(s * s)) * contrib
+    return res.local_contribution(scale * (new - old), ord)

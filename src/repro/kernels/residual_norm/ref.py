@@ -5,15 +5,18 @@ import jax.numpy as jnp
 
 
 def diff_norm_partials_ref(a, b, block: int = 65536, linf: bool = True):
-    af = a.reshape(-1).astype(jnp.float32)
-    bf = b.reshape(-1).astype(jnp.float32)
-    n = af.shape[0]
+    # difference in the wider of (operand dtype, f32), then cast — mirrors
+    # the kernel (see residual_norm._kernel): wide inputs must not quantise
+    # small update differences to zero before they are reduced
+    ct = jnp.promote_types(a.dtype, jnp.float32)
+    df = (a.reshape(-1).astype(ct) - b.reshape(-1).astype(ct)).astype(
+        jnp.float32)
+    n = df.shape[0]
     block = min(block, n)
     pad = (-n) % block
     if pad:
-        af = jnp.pad(af, (0, pad))
-        bf = jnp.pad(bf, (0, pad))
-    d = (af - bf).reshape(-1, block)
+        df = jnp.pad(df, (0, pad))
+    d = df.reshape(-1, block)
     if linf:
         return jnp.max(jnp.abs(d), axis=1)
     return jnp.sum(d * d, axis=1)

@@ -16,7 +16,14 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(a_ref, b_ref, out_ref, *, linf: bool):
-    d = a_ref[...].astype(jnp.float32) - b_ref[...].astype(jnp.float32)
+    # subtract in the wider of (operand dtype, f32), cast the *difference*:
+    # narrow tiles (bf16) still upcast before differencing, while wide
+    # inputs (the x64 host path, via interpret mode) keep update
+    # differences far below the states' f32 resolution from quantising to
+    # zero — the shard runtime detects on ‖x⁺ − x‖ at thresholds
+    # ~1e-7 · diag⁻¹ relative to the state
+    ct = jnp.promote_types(a_ref.dtype, jnp.float32)
+    d = (a_ref[...].astype(ct) - b_ref[...].astype(ct)).astype(jnp.float32)
     if linf:
         out_ref[0] = jnp.max(jnp.abs(d))
     else:

@@ -7,9 +7,10 @@ import; tests and benchmarks see the real (single) device.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.compat import make_mesh_compat as compat_make_mesh  # re-export
 
@@ -26,6 +27,34 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     data = n // model_axis
     return compat_make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_shard_mesh(n_shards: Optional[int] = None, axis: str = "shard"):
+    """1-D mesh for the asynchronous shard runtime
+    (runtime/shard_runtime.py): one block owner per device along ``axis``.
+
+    Unlike the production meshes this may use a *prefix* of the available
+    devices (a 2-shard runtime on a 4-device host is a valid experiment),
+    so it builds ``jax.sharding.Mesh`` directly instead of going through
+    ``make_mesh`` — which binds every device.
+    """
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else int(n_shards)
+    if n < 1:
+        raise ValueError(f"n_shards={n} must be >= 1")
+    if n > len(devices):
+        raise ValueError(
+            f"n_shards={n} exceeds the {len(devices)} available devices "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "the first jax import to emulate more)")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+
+
+def shard_axis_of(mesh) -> str:
+    """The (single) axis of a shard-runtime mesh."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError(f"expected a 1-D shard mesh, got axes {mesh.axis_names}")
+    return mesh.axis_names[0]
 
 
 def dp_axes_of(mesh) -> Tuple[str, ...]:

@@ -99,6 +99,7 @@ def test_code_fingerprint_tracks_sources_not_docs(tmp_path):
     (root / "src" / "repro" / "a.py").write_text("x = 1\n")
     (root / "benchmarks" / "common.py").write_text("y = 2\n")
     (root / "benchmarks" / "bench_fused.py").write_text("z = 3\n")
+    (root / "benchmarks" / "bench_shard_runtime.py").write_text("w = 4\n")
     (root / "README.md").write_text("v1")
     fp1 = code_fingerprint(root=root)
     (root / "README.md").write_text("v2 — docs only")

@@ -22,6 +22,7 @@ def make_inputs(cfg, key):
 
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.slow
 def test_arch_smoke_train_step(arch):
     """Reduced same-family config: one train step, finite loss/grads,
     correct output shapes, no NaNs."""
@@ -159,6 +160,7 @@ def test_grad_fixups_tie_kv_and_mask_padding():
         assert np.all(wo[:, qmask == 0] == 0)  # [steps, slots, qps, H, D]
 
 
+@pytest.mark.slow
 def test_microbatched_train_step_matches_plain():
     cfg = reduced(get_arch("qwen2-1.5b"))
     m = Model(cfg)

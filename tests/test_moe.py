@@ -7,6 +7,7 @@ from repro.configs.base import ModelConfig
 from repro.models import moe as moe_mod
 from repro.models.moe import moe_init, plan_moe
 from repro.models.transformer import moe_local_reference
+import pytest
 
 
 def _cfg(E=4, k=2, d=32, f=64):
@@ -85,6 +86,7 @@ def test_shard_map_moe_matches_local_reference_single_device():
     np.testing.assert_allclose(float(aux_sm), float(aux_ref), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_is_differentiable_through_dispatch():
     cfg = _cfg(E=4, k=1, d=16, f=32)
     plan = plan_moe(cfg, tp=1, capacity_factor=4.0)

@@ -44,6 +44,7 @@ def test_pairs_skips_work():
     assert abs(float(l1) - float(l2)) < 5e-3
 
 
+@pytest.mark.slow
 def test_save_mixer_remat_grad_parity():
     cfg = reduced(get_arch("qwen2-1.5b"))
     m1 = Model(cfg)

@@ -76,6 +76,7 @@ def test_hybrid_gs_converges_faster_than_jacobi():
     assert out["hybrid"] < out["jacobi"]
 
 
+@pytest.mark.slow
 def test_sharded_solver_single_device_mesh_matches_single():
     from repro.launch.mesh import compat_make_mesh
 

@@ -98,6 +98,7 @@ def test_causal_conv_state_continuation():
     np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), atol=1e-6)
 
 
+@pytest.mark.slow
 def test_ssm_block_prefill_then_decode_matches_full():
     cfg = ModelConfig(name="t", family="ssm", num_layers=1, d_model=32,
                       vocab_size=64, ssm_state=8, ssm_head_dim=8, ssm_expand=2)

@@ -33,6 +33,7 @@ def test_pfait_fires_later_than_sync_by_staleness():
     assert pfait["stop_step"] == sync["stop_step"] + 4
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_continues(tmp_path):
     d = str(tmp_path / "ck")
     out1 = train("qwen2-1.5b", steps=30, batch=4, seq=64, use_reduced=True,
@@ -51,6 +52,7 @@ def test_serve_generates(arch):
     assert out["steps"] >= 1
 
 
+@pytest.mark.slow
 def test_train_all_monitor_modes_run():
     for mode in ["sync", "pfait", "nfais2", "nfais5"]:
         out = train("qwen2-1.5b", steps=12, batch=2, seq=32, use_reduced=True,

@@ -1,0 +1,172 @@
+"""Coverage for core/termination.py (the paper's §4.2 calibration recipe)
+and the event-level RecursiveDoublingProtocol the shard runtime mirrors."""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.async_engine import AsyncEngine, stable_platform
+from repro.core.protocols import PFAIT, PROTOCOLS, RecursiveDoublingProtocol
+from repro.core.termination import (
+    CalibrationReport,
+    calibrate_margin,
+    decade_margin,
+    stability_band,
+)
+from repro.solvers.convdiff import ConvDiffProblem
+
+
+# ---------------------------------------------------------------------------
+# decade_margin / stability_band
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ratio,expected", [
+    (0.3, 1.0),
+    (1.0, 1.0),
+    (1.01, 10.0),
+    (9.99, 10.0),
+    (10.0, 10.0),
+    (10.1, 100.0),
+    (437.0, 1000.0),
+])
+def test_decade_margin_quantises_up(ratio, expected):
+    assert decade_margin(ratio) == expected
+
+
+def test_stability_band_is_minmax_offset():
+    lo, hi = stability_band([2e-7, 5e-7, 9e-7], 1e-6)
+    assert lo == pytest.approx(2e-7 - 1e-6)
+    assert hi == pytest.approx(9e-7 - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# calibrate_margin
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_margin_report_fields():
+    # synthetic solver: overshoots ε by at most 3.2×
+    residuals = iter([1.2e-6, 3.2e-6, 0.8e-6])
+    rep = calibrate_margin(lambda eps: next(residuals), 1e-6, runs=3,
+                           safety=2.0)
+    assert isinstance(rep, CalibrationReport)
+    assert rep.eps_probe == 1e-6
+    assert rep.residuals == (1.2e-6, 3.2e-6, 0.8e-6)
+    assert rep.min_r == 0.8e-6
+    assert rep.max_r == 3.2e-6
+    assert rep.overshoot == pytest.approx(3.2)
+    # 3.2 × safety 2.0 = 6.4 → next decade is 10
+    assert rep.margin == 10.0
+    assert rep.eps_production == pytest.approx(1e-7)
+
+
+def test_calibrate_margin_stable_solver_needs_no_margin():
+    rep = calibrate_margin(lambda eps: 0.4 * eps, 1e-6, runs=2, safety=1.0)
+    assert rep.margin == 1.0
+    assert rep.eps_production == pytest.approx(1e-6)
+
+
+def test_calibrate_margin_on_real_engine():
+    """End-to-end: the recipe run on the actual simulator, PFAIT at ε = ε̃."""
+    seeds = iter(range(100, 110))
+
+    def solve(eps):
+        prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=next(seeds))
+        cfg = dataclasses.replace(stable_platform(), seed=7,
+                                  max_iters=20_000)
+        res = AsyncEngine(prob, cfg, PFAIT(eps, ord=prob.ord)).run()
+        assert res.terminated
+        return res.r_star
+
+    rep = calibrate_margin(solve, 1e-5, runs=2)
+    assert rep.margin >= 1.0
+    assert math.log10(rep.margin) == pytest.approx(
+        round(math.log10(rep.margin)))  # decade-quantised
+    assert rep.eps_production == pytest.approx(1e-5 / rep.margin)
+
+
+# ---------------------------------------------------------------------------
+# RecursiveDoublingProtocol (event level)
+# ---------------------------------------------------------------------------
+
+
+def _run_rdub(p=4, eps=1e-6, seed=0, n=8, max_iters=40_000):
+    prob = ConvDiffProblem(n=n, p=p, rho=0.85, seed=seed)
+    cfg = dataclasses.replace(stable_platform(), seed=seed,
+                              max_iters=max_iters)
+    eng = AsyncEngine(prob, cfg, RecursiveDoublingProtocol(eps, ord=prob.ord))
+    return eng, eng.run()
+
+
+def test_rdub_registered():
+    assert PROTOCOLS["rdub"] is RecursiveDoublingProtocol
+
+
+def test_rdub_terminates_within_margin():
+    eng, res = _run_rdub()
+    assert res.terminated
+    assert res.detected_residual < 1e-6
+    # live claim: final exact residual within the usual decade of ε
+    assert res.r_star < 1e-5
+
+
+def test_rdub_rejects_non_power_of_two():
+    prob = ConvDiffProblem(n=9, p=3, rho=0.85, seed=0)
+    cfg = dataclasses.replace(stable_platform(), seed=0, max_iters=100)
+    eng = AsyncEngine(prob, cfg, RecursiveDoublingProtocol(1e-6, ord=prob.ord))
+    with pytest.raises(ValueError, match="power-of-two"):
+        eng.run()
+
+
+def test_rdub_message_overhead_is_butterfly_shaped():
+    """log2(p) rdub messages per per-worker epoch, nothing else
+    protocol-borne."""
+    eng, res = _run_rdub(p=4)
+    assert set(res.msg_counts) == {"data", "rdub"}
+    rounds = int(math.log2(4))
+    msgs = res.msg_counts["rdub"]
+    # each started per-worker epoch (== one reductions_started tick) sends
+    # at most `rounds` messages, and all but the in-flight final epochs
+    # send exactly `rounds`
+    assert res.reductions >= 4
+    assert msgs <= rounds * res.reductions
+    assert msgs >= rounds * (res.reductions - 4)
+
+
+def test_rdub_single_worker_decides_alone():
+    eng, res = _run_rdub(p=1)
+    assert res.terminated
+    assert res.msg_counts.get("rdub", 0) == 0  # no partners to talk to
+    assert res.r_star < 1e-5
+
+
+def test_rdub_skips_per_iteration_residuals():
+    """Like PFAIT, the protocol samples live state — the engine's fused
+    path must skip every per-sweep residual evaluation."""
+    prob = ConvDiffProblem(n=8, p=2, rho=0.85, seed=0)
+    cfg = dataclasses.replace(stable_platform(), seed=0, max_iters=40_000)
+    proto = RecursiveDoublingProtocol(1e-6, ord=prob.ord)
+    eng = AsyncEngine(prob, cfg, proto)
+    assert proto.wants_residual(eng, 0) is False
+    res = eng.run()
+    assert res.terminated
+
+
+def test_rdub_oracle_scores_live_claim():
+    """The reliability oracle must accept the protocol unchanged (claim
+    semantics identical to PFAIT's)."""
+    from repro.core.reliability import detection_report, run_traced
+
+    def prob_fn():
+        return ConvDiffProblem(n=8, p=4, rho=0.85, seed=3)
+
+    cfg = dataclasses.replace(stable_platform(), seed=3, max_iters=40_000)
+    res, rec = run_traced(
+        prob_fn, cfg,
+        lambda pr: RecursiveDoublingProtocol(1e-6, ord=pr.ord),
+        residual_stride=10)
+    rep = detection_report(rec, 1e-6, factor=10.0)
+    assert rep.claim == "live"
+    assert res.terminated
+    assert not rep.false_detection
