@@ -29,6 +29,18 @@ Metrics and tolerances (the CI contract):
     (median-of-round ratios; shared-runner noise, same contract as
     ``fused_smoke``'s wall speedup).
 
+* ``elastic_smoke`` (BENCH_elastic_smoke.json):
+  - per-cell ``terminated`` / ``false_detection`` of the dynamic-membership
+    event matrix AND the fault-injected device matrix — exact (seeded,
+    deterministic runs), plus event ``membership_changes`` exact (the
+    scenario's full crash/join/restore sequence must land before
+    detection — a drift means the cell stopped exercising elasticity),
+  - device ``restarts`` / ``stall_segments`` — exact (the crash → heartbeat
+    → shrink → restore cycle is deterministic in segment time),
+  - device ``lost_iters`` — one-sided *ceiling* at +30%: rolled-back work
+    is the recovery cost; paying more than the baseline is the regression,
+    recovering cheaper is not.
+
 Usage:
   python benchmarks/check_regression.py fused_smoke \
       --baseline benchmarks/baselines/BENCH_fused_smoke.json \
@@ -158,10 +170,57 @@ def _shard_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
     )
 
 
+def _elastic_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
+    def event_cells(rep):
+        return {(c["protocol"], c["scenario"], c["seed"]): c
+                for c in rep["event"]}
+
+    fresh_ev = event_cells(fresh)
+    for key, bcell in sorted(event_cells(base).items()):
+        fcell = fresh_ev[key]
+        name = "/".join(str(k) for k in key)
+        yield (f"event.{name}.terminated", float(bcell["terminated"]),
+               float(fcell["terminated"]), "exact", 0.0)
+        yield (f"event.{name}.false_detection",
+               float(bcell["false_detection"]),
+               float(fcell["false_detection"]), "exact", 0.0)
+        # the scenario's whole membership sequence must still land before
+        # detection — fewer changes means the cell degenerated into a
+        # static run and stopped testing elasticity
+        yield (f"event.{name}.membership_changes",
+               float(bcell["membership_changes"]),
+               float(fcell["membership_changes"]), "exact", 0.0)
+
+    def device_cells(rep):
+        return {(c["family"], c["reduction"], c["mode"], c["scenario"],
+                 c["seed"]): c for c in rep["device"]}
+
+    fresh_dv = device_cells(fresh)
+    for key, bcell in sorted(device_cells(base).items()):
+        fcell = fresh_dv[key]
+        name = "/".join(str(k) for k in key)
+        yield (f"device.{name}.terminated", float(bcell["terminated"]),
+               float(fcell["terminated"]), "exact", 0.0)
+        yield (f"device.{name}.false_detection",
+               float(bcell["false_detection"]),
+               float(fcell["false_detection"]), "exact", 0.0)
+        yield (f"device.{name}.restarts", float(bcell["restarts"]),
+               float(fcell["restarts"]), "exact", 0.0)
+        yield (f"device.{name}.stall_segments",
+               float(bcell["stall_segments"]),
+               float(fcell["stall_segments"]), "exact", 0.0)
+        if bcell["restarts"]:
+            # recovery cost: rolling back MORE work than the baseline is
+            # the regression; recovering cheaper never fails the gate
+            yield (f"device.{name}.lost_iters", float(bcell["lost_iters"]),
+                   float(fcell["lost_iters"]), "ceil", 0.30)
+
+
 BENCHES = {
     "fused_smoke": _fused_smoke,
     "reliability_smoke": _reliability_smoke,
     "shard_smoke": _shard_smoke,
+    "elastic_smoke": _elastic_smoke,
 }
 
 
@@ -174,6 +233,9 @@ def run_checks(bench: str, base: Dict, fresh: Dict) -> int:
         elif mode == "floor":
             ok = f >= b * (1.0 - tol)
             detail = f"baseline={b:.4g} fresh={f:.4g} (floor {b * (1.0 - tol):.4g}, -{tol:.0%})"
+        elif mode == "ceil":
+            ok = f <= b * (1.0 + tol)
+            detail = f"baseline={b:.4g} fresh={f:.4g} (ceil {b * (1.0 + tol):.4g}, +{tol:.0%})"
         else:
             rel = abs(f - b) / abs(b) if b else float("inf")
             ok = rel <= tol

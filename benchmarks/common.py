@@ -421,3 +421,26 @@ def _cell_shard_hbm(**kw) -> Dict:
     from benchmarks.bench_shard_runtime import shard_hbm
 
     return shard_hbm(**kw)
+
+
+# -- elastic cells (benchmarks/bench_elastic.py) -----------------------------
+
+
+@cell_kind("elastic_event", env=("numpy",), cost=_reliability_cost)
+def _cell_elastic_event(**kw) -> Dict:
+    """One dynamic-membership engine run (crash/join/checkpoint-restart),
+    oracle-scored against the active-subsystem residual."""
+    from benchmarks.bench_elastic import elastic_event
+
+    return elastic_event(**kw)
+
+
+@cell_kind("elastic_device", env=("jax",),
+           cost=lambda s: s.get("n", 24) ** 3 * s.get("max_segments", 60))
+def _cell_elastic_device(**kw) -> Dict:
+    """One fault-injected shard-runtime run (needs a multi-device platform,
+    see the shard cells above): crash -> heartbeat -> shrink -> restore ->
+    resume, detection oracle-scored + recovery cost reported."""
+    from benchmarks.bench_elastic import elastic_device
+
+    return elastic_device(**kw)

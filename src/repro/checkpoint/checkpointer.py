@@ -48,12 +48,23 @@ def _step_dir(base: str, step: int) -> str:
     return os.path.join(base, f"step_{step:06d}")
 
 
+def _parse_step(name: str) -> Optional[int]:
+    """Step number of a ``step_NNNNNN`` directory name, or None for
+    anything malformed (stray files, ``step_`` without digits, tmp dirs) —
+    a foreign file in the checkpoint dir must not crash GC or discovery."""
+    if not name.startswith("step_") or name.endswith(".tmp"):
+        return None
+    suffix = name[len("step_"):]
+    return int(suffix) if suffix.isdigit() else None
+
+
 class Checkpointer:
     def __init__(self, base_dir: str, keep: int = 3):
         self.base = base_dir
         self.keep = keep
         os.makedirs(base_dir, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------
     def save(self, state: Any, step: int, blocking: bool = False) -> None:
@@ -89,21 +100,35 @@ class Checkpointer:
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            def guarded():
+                try:
+                    write()
+                except BaseException as exc:  # noqa: BLE001 — repropagated
+                    self._error = exc
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight save; a failure on the background thread is
+        re-raised here (or from the next ``save``, which waits first) —
+        never silently reported as committed."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            exc = self._error
+            self._error = None
+            raise RuntimeError("async checkpoint save failed") from exc
 
     # ------------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
         steps = []
         for name in os.listdir(self.base):
+            step = _parse_step(name)
             d = os.path.join(self.base, name)
-            if name.startswith("step_") and os.path.exists(os.path.join(d, "_COMMITTED")):
-                steps.append(int(name.split("_")[1]))
+            if step is not None and os.path.exists(os.path.join(d, "_COMMITTED")):
+                steps.append(step)
         return max(steps) if steps else None
 
     def restore(self, step: Optional[int] = None, like: Any = None,
@@ -136,8 +161,8 @@ class Checkpointer:
 
     def _gc(self) -> None:
         steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.base)
-            if n.startswith("step_") and not n.endswith(".tmp")
+            s for n in os.listdir(self.base)
+            if (s := _parse_step(n)) is not None
         )
         for s in steps[: -self.keep]:
             shutil.rmtree(_step_dir(self.base, s), ignore_errors=True)

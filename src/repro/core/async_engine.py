@@ -55,6 +55,8 @@ from typing import Any, Callable, Dict, List, Optional, Protocol as TProtocol, S
 
 import numpy as np
 
+from repro.core.residual import combine_contributions
+
 
 # ---------------------------------------------------------------------------
 # Problem interface
@@ -351,10 +353,46 @@ class AsyncEngine:
         for i in range(p):
             for j in problem.neighbors(i):
                 self.deps[i][j] = problem.interface(j, self.x[j], i)
+        # -- dynamic membership (core.scenarios crash/join/restart) --------
+        # Timelines are static (declared at scenario construction), so the
+        # member/checkpoint events below are scheduled once here, consume no
+        # RNG draws, and leave non-membership runs event-identical.
+        self.active: List[bool] = [True] * p
+        self.membership_changes = 0
+        member_events: Tuple[Tuple[float, str, int], ...] = ()
+        if sc is not None and getattr(sc, "elastic", False):
+            member_events = sc.membership_events()
+            for t_ev, kind_ev, w in member_events:
+                if not 0 <= w < p:
+                    raise ValueError(
+                        f"membership event {kind_ev!r} targets worker {w} "
+                        f"outside 0..{p - 1}")
+            for w in sc.initially_inactive():
+                self.active[w] = False
+        self._has_membership = bool(member_events)
+        # readmission times per worker (parked compute chains resume there)
+        self._resume_at: Dict[int, List[float]] = {}
+        # periodic state snapshots backing "restore" events
+        self._ckpt_state: List[Optional[Tuple]] = [None] * p
         # event queue
         self._heap: List[Tuple[float, int, str, Any]] = []
         self._counter = itertools.count()
         self._fifo_last: Dict[Tuple[int, int], float] = {}
+        if self._has_membership:
+            for t_ev, kind_ev, w in member_events:
+                if kind_ev in ("join", "restore"):
+                    self._resume_at.setdefault(w, []).append(t_ev)
+            restores = [t_ev for t_ev, k_ev, _ in member_events
+                        if k_ev == "restore"]
+            every = getattr(sc, "checkpoint_every", None)
+            if restores and every:
+                # snapshots are only consumed by restores — schedule the
+                # bounded prefix of the cadence, keeping the heap drainable
+                n_ckpt = int(math.floor(max(restores) / every)) + 1
+                for m in range(1, n_ckpt + 1):
+                    self.schedule(m * every, "ckpt", None)
+            for t_ev, kind_ev, w in member_events:
+                self.schedule(t_ev, "member", (kind_ev, w))
         # accounting
         self.msg_counts: Dict[str, int] = {}
         self.msg_bytes: Dict[str, int] = {}
@@ -446,7 +484,13 @@ class AsyncEngine:
     ) -> None:
         """Non-blocking tree reduction: contribution of worker i is sampled at
         a staggered time (this is the PFAIT inconsistency), completion fires
-        2·ceil(log2 p)·hop after the last contribution."""
+        2·ceil(log2 p)·hop after the last contribution.
+
+        Under dynamic membership the reduction spans the workers active at
+        *launch* (offset draws still cover all p slots, so the RNG stream is
+        membership-independent): a worker that crashes before its sample
+        time contributes NaN (the combiner skips it), one that joins
+        mid-reduction waits for the next launch."""
         self.reductions_started += 1
         offsets = self.cfg.channel.sample(self.rng, self.p)
         if self._sc_channel is not None:
@@ -459,21 +503,28 @@ class AsyncEngine:
             ])
         sample_times = t + offsets
         contribs = np.full(self.p, np.nan)
-        remaining = [self.p]
+        active = self.active
+        participants = [i for i in range(self.p) if active[i]]
+        if not participants:
+            return  # empty membership: nothing to reduce, never completes
+        remaining = [len(participants)]
 
         def make_sampler(i, ts):
             def fire(_):
-                contribs[i] = sample_fn(i, ts)
+                if active[i]:
+                    contribs[i] = sample_fn(i, ts)
                 remaining[0] -= 1
                 if remaining[0] == 0:
-                    done_t = float(np.max(sample_times)) + 2 * math.ceil(
+                    done_t = float(max(
+                        float(sample_times[j]) for j in participants
+                    )) + 2 * math.ceil(
                         math.log2(max(self.p, 2))
                     ) * self.cfg.hop_latency
                     self.schedule(done_t, "callback", lambda tt: on_complete(contribs, tt))
 
             return fire
 
-        for i in range(self.p):
+        for i in participants:
             self.schedule(float(sample_times[i]), "callback", make_sampler(i, float(sample_times[i])))
 
     # -- termination ---------------------------------------------------------
@@ -493,6 +544,8 @@ class AsyncEngine:
     def run(self) -> RunResult:
         cfg = self.cfg
         for i in range(self.p):
+            if not self.active[i]:
+                continue  # late joiners sweep from their admission event
             dt = self._draw_compute() * self.speed[i]
             if self._sc_compute is not None:
                 dt = self._sc_compute.compute_delay(0.0, i, dt, self.rng)
@@ -522,6 +575,7 @@ class AsyncEngine:
         send_data = self._send_data
         rng = self.rng
         nan = float("nan")
+        active = self.active  # mutated in place by _apply_membership
 
         while heap:
             t, _, kind, payload = heappop_(heap)
@@ -540,6 +594,16 @@ class AsyncEngine:
                 break
             if kind == "compute":
                 i = payload
+                if not active[i]:
+                    # crashed worker: park the compute chain at its next
+                    # readmission (restore/join) time, or sever it for good
+                    # — parking keeps readmitted workers on ONE chain (no
+                    # duplicate scheduling, no extra RNG draws)
+                    for rt in self._resume_at.get(i, ()):
+                        if rt > t:
+                            heappush_(heap, (rt, next(counter), "compute", i))
+                            break
+                    continue
                 if sc_pause is not None:
                     resume = sc_pause.paused_until(t, i)
                     if resume is not None and resume > t:
@@ -550,9 +614,12 @@ class AsyncEngine:
                 if t > stop_time[i] or k[i] >= max_iters:
                     if (k[i] >= max_iters
                             and self._exhaust_deadline is None
-                            and min(k) >= max_iters):
+                            and min(kk for kk, al in zip(k, active)
+                                    if al) >= max_iters):
                         # grace: let in-flight data drain + a few reduction
-                        # rounds sample the final (now frozen) state
+                        # rounds sample the final (now frozen) state (over
+                        # the *active* membership — a crashed worker's
+                        # frozen counter must not block exhaustion)
                         self._exhaust_deadline = t + 100 * (
                             cfg.channel.base + cfg.hop_latency
                         )
@@ -580,6 +647,8 @@ class AsyncEngine:
                 heappush_(heap, (t + dt, next(counter), "compute", i))
             elif kind == "deliver":
                 msg: Msg = payload
+                if not active[msg.dst]:
+                    continue  # messages to crashed/absent workers are lost
                 if msg.kind == "data":
                     if t <= stop_time[msg.dst]:
                         deps[msg.dst][msg.src] = msg.payload
@@ -588,6 +657,10 @@ class AsyncEngine:
                     on_message(self, msg, t)
             elif kind == "callback":
                 payload(t)
+            elif kind == "member":
+                self._apply_membership(payload, t)
+            elif kind == "ckpt":
+                self._take_checkpoint(t)
 
         wtime = self._stop_max if self.detect_time is not None else self.now
         r_star = self.problem.exact_residual(self.x)
@@ -608,6 +681,90 @@ class AsyncEngine:
         if self.recorder is not None:
             self.recorder.on_finish(self, result)
         return result
+
+    # -- dynamic membership -------------------------------------------------
+    def _apply_membership(self, ev: Tuple[str, int], t: float) -> None:
+        kind, w = ev
+        if kind == "crash":
+            if not self.active[w]:
+                return
+            self.active[w] = False
+        else:  # "join" | "restore"
+            if self.active[w]:
+                return
+            if kind == "restore":
+                snap = self._ckpt_state[w]
+                if snap is not None:
+                    x_w, deps_w, _k_w = snap
+                    self.x[w] = np.array(x_w, copy=True)
+                    self.deps[w] = {j: np.array(a, copy=True)
+                                    for j, a in deps_w.items()}
+                else:
+                    # crashed before the first snapshot: cold restart from
+                    # the initial state (x^0 + t=0 interface views)
+                    self.x[w] = self.problem.init_local(w)
+                    self.deps[w] = {
+                        j: self.problem.interface(
+                            j, self.problem.init_local(j), w)
+                        for j in self.problem.neighbors(w)}
+            self.active[w] = True
+            if kind == "join":
+                # late joiner: no compute chain exists yet — start one.
+                # (A restored worker's chain was parked by the event loop
+                # and resumes at this instant on its own.)
+                dt = self._draw_compute() * self.speed[w]
+                if self._sc_compute is not None:
+                    dt = self._sc_compute.compute_delay(t, w, dt, self.rng)
+                self.schedule(t + dt, "compute", w)
+        self.membership_changes += 1
+        if self.recorder is not None:
+            hook = getattr(self.recorder, "on_membership", None)
+            if hook is not None:
+                hook(self, t, kind, w)
+        hook = getattr(self.protocol, "on_membership", None)
+        if hook is not None:
+            hook(self, t, kind, w)
+
+    def _take_checkpoint(self, t: float) -> None:
+        for i in range(self.p):
+            if self.active[i]:
+                self._ckpt_state[i] = (
+                    np.array(self.x[i], copy=True),
+                    {j: np.array(a, copy=True)
+                     for j, a in self.deps[i].items()},
+                    self.k[i],
+                )
+
+    def active_workers(self) -> List[int]:
+        return [i for i in range(self.p) if self.active[i]]
+
+    def exact_active_residual(self, xs: Optional[Sequence] = None) -> float:
+        """Exact residual of the *active* subsystem: contributions from
+        active workers only, with fresh interface views assembled from
+        ``xs`` (default: live state) for active neighbours.  This is the
+        ground truth a detection claim is scored against once the
+        membership has changed — inactive blocks are boundary data, not
+        unknowns (dynamic asynchronous iterations converge to the fixed
+        point of the active subsystem).
+
+        An *inactive* neighbour's boundary value is the receiver's frozen
+        delivered view (``deps[i][j]``), not ``interface(x_j)``: over
+        non-FIFO channels the dead worker's final interface message can be
+        overtaken by an older one, so the survivors' fixed point is defined
+        by what was actually delivered — the dead block's final state is
+        unobservable to any detector, oracle included."""
+        xs = self.x if xs is None else xs
+        prob = self.problem
+        active = self.active
+        contribs = []
+        for i in range(self.p):
+            if not active[i]:
+                continue
+            deps_i = {j: (prob.interface(j, xs[j], i) if active[j]
+                          else self.deps[i][j])
+                      for j in prob.neighbors(i)}
+            contribs.append(prob.local_residual(i, xs[i], deps_i))
+        return float(combine_contributions(contribs, prob.ord))
 
     # convenience for protocols
     def live_local_residual(self, i: int) -> float:

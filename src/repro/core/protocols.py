@@ -71,6 +71,15 @@ class BaseProtocol:
         protocol then receives ``r_i = NaN``)."""
         return True
 
+    def on_membership(self, eng: AsyncEngine, t: float, kind: str,
+                      worker: int) -> None:
+        """The participant set changed (kind ∈ {"crash", "join", "restore"},
+        core.scenarios membership primitives).  Default: no bookkeeping —
+        PFAIT's reductions are re-launched over the live active set anyway;
+        snapshot protocols override to invalidate their records (a record
+        quorum taken over the old membership certifies the wrong system)."""
+        pass
+
     # shared helper: tree-reduction completion latency
     def _reduce_latency(self, eng: AsyncEngine) -> float:
         return 2 * math.ceil(math.log2(max(eng.p, 2))) * eng.cfg.hop_latency
@@ -85,6 +94,23 @@ class BaseProtocol:
             if fast is not None:
                 return fast(i, own, deps)
         return eng.problem.local_residual(i, own, deps)
+
+    # shared helper for the snapshot protocols under dynamic membership: a
+    # crashed neighbour sends no snapshot message, but its interface is
+    # frozen boundary data — complete the record with the current delivered
+    # view (identical to the frozen worker's last sent interface once
+    # in-flight messages drain).  No-op (returns the record unchanged) when
+    # every neighbour is active.
+    def _record_deps_with_boundary(self, eng: AsyncEngine, i: int) -> Dict:
+        deps = self.rec_deps[i]
+        missing = [j for j in eng.problem.neighbors(i)
+                   if j not in deps and not eng.active[j]]
+        if not missing:
+            return deps
+        out = dict(deps)
+        for j in missing:
+            out[j] = eng.deps[i][j]
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -108,14 +134,39 @@ class PFAIT(BaseProtocol):
         return False
 
     def on_start(self, eng: AsyncEngine, t: float) -> None:
+        self._gen = 0
+        self._launch(eng, t)
+
+    def on_membership(self, eng: AsyncEngine, t: float, kind: str,
+                      worker: int) -> None:
+        # In-flight reductions carry samples of *pre-change* state.  For a
+        # crash that is harmless (the survivors' residuals keep shrinking),
+        # but a join or checkpoint-restore makes convergence non-monotone:
+        # a reduction whose samples all predate a rollback would certify a
+        # state that no longer exists (observed as a false detection on the
+        # crash_restart scenario).  Membership changes are engine-visible
+        # events, so the honest semantics is the elastic one: discard every
+        # chain sampled under the old membership and relaunch fresh.
+        self._gen += 1
         self._launch(eng, t)
 
     def _launch(self, eng: AsyncEngine, t: float) -> None:
         if eng.detect_time is not None:
             return
+        gen = self._gen
 
         def complete(contribs: np.ndarray, tc: float) -> None:
-            g = combine_contributions(contribs, self.ord)
+            if gen != self._gen:
+                return  # superseded chain: sampled under old membership
+            # NaN slots are workers outside the membership at launch or
+            # crashed before their sample time — the reduction spans the
+            # remaining participants (protocol-free: no bookkeeping, the
+            # next launch simply covers the new active set)
+            vals = contribs[~np.isnan(contribs)]
+            if vals.size == 0:
+                self._launch(eng, tc)
+                return
+            g = combine_contributions(vals, self.ord)
             if g < self.eps:
                 eng.terminate(tc, g)
             else:
@@ -154,6 +205,14 @@ class RecursiveDoublingProtocol(BaseProtocol):
 
     name = "rdub"
 
+    #: sentinel "rounds" for the non-power-of-two remainder fold: at epoch
+    #: start an extra rank pre-combines its contribution into a butterfly
+    #: participant (FOLD) and receives the epoch total back (RESULT) — the
+    #: classic MPI reduce trick that generalises the butterfly to any
+    #: membership size after a crash/join
+    FOLD = -1
+    RESULT = -2
+
     def __init__(self, eps: float, ord: float = 2.0):
         super().__init__(eps, ord)
 
@@ -162,74 +221,159 @@ class RecursiveDoublingProtocol(BaseProtocol):
         # starts, never from per-iteration residuals
         return False
 
+    def _acc(self, a: float, b: float) -> float:
+        return max(a, b) if math.isinf(self.ord) else a + b
+
+    @staticmethod
+    def _geometry(m: int) -> Tuple[int, int, int, int]:
+        """(m, q, rounds, rem): q = largest power of two ≤ m runs the
+        butterfly; rem = m − q extra ranks fold into ranks 0..rem−1."""
+        q = 1 << (m.bit_length() - 1)
+        return m, q, q.bit_length() - 1, m - q
+
     def on_start(self, eng: AsyncEngine, t: float) -> None:
         p = eng.p
         if p & (p - 1):
             raise ValueError(
                 f"RecursiveDoublingProtocol requires a power-of-two worker "
                 f"count, got p={p}")
-        self.rounds = max(p.bit_length() - 1, 0)  # log2 p
+        # epoch/round messages are stamped with a membership generation:
+        # a crash/join bumps it and restarts every epoch over the new
+        # member list, so stragglers from the old geometry are discarded
+        self.generation = 0
+        self.members: Tuple[int, ...] = tuple(eng.active_workers())
+        self._geom = self._geometry(max(len(self.members), 1))
         self.epoch = [0] * p
         self.rnd = [0] * p
         self.partial = [0.0] * p
+        self.folded = [True] * p
         # out-of-order buffer: partner partials keyed by (epoch, round) —
         # bounded, because a partner cannot advance a round without our
         # reply for the previous one
         self.pending: List[Dict[Tuple[int, int], float]] = [
             dict() for _ in range(p)]
-        for i in range(p):
+        for i in self.members:
+            self._begin_epoch(eng, i, t)
+
+    def on_membership(self, eng: AsyncEngine, t: float, kind: str,
+                      worker: int) -> None:
+        if eng.detect_time is not None:
+            return
+        self.generation += 1
+        self.members = tuple(eng.active_workers())
+        for buf in self.pending:
+            buf.clear()
+        if not self.members:
+            return
+        self._geom = self._geometry(len(self.members))
+        # epoch counters restart from a common base: workers completed
+        # *different* epoch counts in the old generation, and partners key
+        # buffered partials by (epoch, round) — mismatched absolute counters
+        # would deadlock the new butterfly (the generation stamp already
+        # quarantines every old-geometry message)
+        self.epoch = [0] * eng.p
+        for i in self.members:
             self._begin_epoch(eng, i, t)
 
     def _begin_epoch(self, eng: AsyncEngine, i: int, t: float) -> None:
         self.partial[i] = eng.live_local_residual(i)
         self.rnd[i] = 0
         eng.reductions_started += 1
-        if self.rounds == 0:
-            # p = 1: the local contribution is the global sum; re-check at
+        m, q, rounds, rem = self._geom
+        if m == 1:
+            # the local contribution is the global sum; re-check at
             # reduction cadence instead of recursing at frozen virtual time
+            gen = self.generation
             g = combine_contributions([self.partial[i]], self.ord)
             if g < self.eps:
                 eng.terminate(t, g)
             else:
-                eng.schedule(t + 2 * eng.cfg.hop_latency, "callback",
-                             lambda tt: self._begin_epoch(eng, i, tt))
+                def again(tt, _i=i, _gen=gen):
+                    if _gen == self.generation and eng.detect_time is None:
+                        self._begin_epoch(eng, _i, tt)
+                eng.schedule(t + 2 * eng.cfg.hop_latency, "callback", again)
             return
-        self._send_round(eng, i, t)
+        r = self.members.index(i)
+        if r >= q:
+            # extra rank: fold into the partner, await the epoch RESULT
+            eng.send(
+                Msg(src=i, dst=self.members[r - q], kind="rdub",
+                    payload=(self.generation, self.epoch[i], self.FOLD,
+                             self.partial[i])),
+                t,
+            )
+            return
+        self.folded[i] = (r + q >= m)  # no extra rank folds into us
+        if self.folded[i]:
+            self._send_round(eng, i, t)
+        self._advance(eng, i, t)
 
     def _send_round(self, eng: AsyncEngine, i: int, t: float) -> None:
-        r = self.rnd[i]
+        r_idx = self.members.index(i)
+        rnd = self.rnd[i]
         eng.send(
-            Msg(src=i, dst=i ^ (1 << r), kind="rdub",
-                payload=(self.epoch[i], r, self.partial[i])),
+            Msg(src=i, dst=self.members[r_idx ^ (1 << rnd)], kind="rdub",
+                payload=(self.generation, self.epoch[i], rnd,
+                         self.partial[i])),
             t,
         )
 
     def on_message(self, eng: AsyncEngine, msg: Msg, t: float) -> None:
         if msg.kind != "rdub" or eng.detect_time is not None:
             return
-        e, r, val = msg.payload
-        self.pending[msg.dst][(int(e), int(r))] = float(val)
-        self._advance(eng, msg.dst, t)
+        gen, e, r, val = msg.payload
+        if int(gen) != self.generation:
+            return  # pre-membership-change straggler: geometry is gone
+        i = msg.dst
+        if int(r) == self.RESULT:
+            # epoch total delivered back to an extra (folded-in) rank:
+            # decide independently, like every butterfly participant
+            if int(e) != self.epoch[i]:
+                return
+            g = combine_contributions([float(val)], self.ord)
+            if g < self.eps:
+                eng.terminate(t, g)
+            else:
+                self.epoch[i] += 1
+                self._begin_epoch(eng, i, t)
+            return
+        self.pending[i][(int(e), int(r))] = float(val)
+        self._advance(eng, i, t)
 
     def _advance(self, eng: AsyncEngine, i: int, t: float) -> None:
+        if not self.folded[i]:
+            val = self.pending[i].pop((self.epoch[i], self.FOLD), None)
+            if val is None:
+                return
+            self.partial[i] = self._acc(self.partial[i], val)
+            self.folded[i] = True
+            self._send_round(eng, i, t)  # round 0 waits for the fold
         while eng.detect_time is None:
+            m, q, rounds, rem = self._geom
             val = self.pending[i].pop((self.epoch[i], self.rnd[i]), None)
             if val is None:
                 return
-            self.partial[i] = (
-                max(self.partial[i], val) if math.isinf(self.ord)
-                else self.partial[i] + val)
+            self.partial[i] = self._acc(self.partial[i], val)
             self.rnd[i] += 1
-            if self.rnd[i] < self.rounds:
+            if self.rnd[i] < rounds:
                 self._send_round(eng, i, t)
                 continue
             # epoch complete: every worker holds the global sum and decides
+            r_idx = self.members.index(i)
+            if r_idx < rem:
+                eng.send(
+                    Msg(src=i, dst=self.members[r_idx + q], kind="rdub",
+                        payload=(self.generation, self.epoch[i], self.RESULT,
+                                 self.partial[i])),
+                    t,
+                )
             g = combine_contributions([self.partial[i]], self.ord)
             if g < self.eps:
                 eng.terminate(t, g)
                 return
             self.epoch[i] += 1
             self._begin_epoch(eng, i, t)
+            return
 
 
 # ---------------------------------------------------------------------------
@@ -255,15 +399,29 @@ class NFAIS2(BaseProtocol):
         self._reset_round_state = True
 
     def recorded_vector(self):
-        if any(r is None for r in self.rec_own):
+        active = getattr(self, "_active", None)
+        if active is None:
+            active = [True] * len(self.rec_own)
+        if any(self.rec_own[i] is None
+               for i in range(len(self.rec_own)) if active[i]):
             return None
+        # holes (None) are workers outside the membership — the oracle
+        # substitutes their frozen live blocks (boundary data, not claims)
         return list(self.rec_own)
 
     def on_start(self, eng: AsyncEngine, t: float) -> None:
         p = eng.p
         self.rec_own: List[Optional[np.ndarray]] = [None] * p
         self.rec_deps: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
+        self._active = list(eng.active)
         self._reducing = False
+
+    def on_membership(self, eng: AsyncEngine, t: float, kind: str,
+                      worker: int) -> None:
+        # any membership change invalidates the round: a quorum over the
+        # old member set would certify a system that no longer exists
+        self._active = list(eng.active)
+        self._new_round()
 
     def _new_round(self) -> None:
         self.round += 1
@@ -296,27 +454,36 @@ class NFAIS2(BaseProtocol):
         self._maybe_reduce(eng, t)
 
     def _ready(self, eng: AsyncEngine, i: int) -> bool:
+        # a snapshot message can only ever arrive from an *active*
+        # neighbour; a crashed one's interface is frozen boundary data,
+        # merged at reduce time (_record_deps_with_boundary)
         return self.rec_own[i] is not None and all(
-            j in self.rec_deps[i] for j in eng.problem.neighbors(i)
+            j in self.rec_deps[i] or not eng.active[j]
+            for j in eng.problem.neighbors(i)
         )
 
     def _maybe_reduce(self, eng: AsyncEngine, t: float) -> None:
         if self._reducing or eng.detect_time is not None:
             return
-        if not all(self._ready(eng, i) for i in range(eng.p)):
+        members = eng.active_workers()
+        if not members or not all(self._ready(eng, i) for i in members):
             return
         self._reducing = True
         contribs = np.array(
             [
-                self._record_residual(eng, i, self.rec_own[i], self.rec_deps[i])
-                for i in range(eng.p)
+                self._record_residual(eng, i, self.rec_own[i],
+                                      self._record_deps_with_boundary(eng, i))
+                for i in members
             ]
         )
         eng.reductions_started += 1
         g = combine_contributions(contribs, self.ord)
         tc = t + self._reduce_latency(eng)
+        rnd = self.round
 
         def complete(tt: float) -> None:
+            if self.round != rnd:
+                return  # membership change invalidated this quorum mid-reduce
             if g < self.eps:
                 eng.terminate(tt, g)
             else:
@@ -351,7 +518,13 @@ class NFAIS5(BaseProtocol):
         self.consec = np.zeros(p, dtype=np.int64)   # consecutive sub-ε sweeps
         self.supp = np.full(p, -1, dtype=np.int64)  # supplementary counter
         self.confirmed = np.zeros(p, dtype=bool)
+        self._active = list(eng.active)
         self._reducing = False
+
+    def on_membership(self, eng: AsyncEngine, t: float, kind: str,
+                      worker: int) -> None:
+        self._active = list(eng.active)
+        self._new_round()
 
     def _new_round(self) -> None:
         self.round += 1
@@ -421,26 +594,32 @@ class NFAIS5(BaseProtocol):
         return (
             self.rec_own[i] is not None
             and self.confirmed[i]
-            and all(j in self.rec_deps[i] for j in eng.problem.neighbors(i))
+            and all(j in self.rec_deps[i] or not eng.active[j]
+                    for j in eng.problem.neighbors(i))
         )
 
     def _maybe_reduce(self, eng: AsyncEngine, t: float) -> None:
         if self._reducing or eng.detect_time is not None:
             return
-        if not all(self._ready(eng, i) for i in range(eng.p)):
+        members = eng.active_workers()
+        if not members or not all(self._ready(eng, i) for i in members):
             return
         self._reducing = True
         contribs = np.array(
             [
-                self._record_residual(eng, i, self.rec_own[i], self.rec_deps[i])
-                for i in range(eng.p)
+                self._record_residual(eng, i, self.rec_own[i],
+                                      self._record_deps_with_boundary(eng, i))
+                for i in members
             ]
         )
         eng.reductions_started += 1
         g = combine_contributions(contribs, self.ord)
         tc = t + self._reduce_latency(eng)
+        rnd = self.round
 
         def complete(tt: float) -> None:
+            if self.round != rnd:
+                return  # membership change invalidated this quorum mid-reduce
             if g < self.eps:
                 eng.terminate(tt, g)
             else:
@@ -468,7 +647,11 @@ class ExactSnapshotFIFO(BaseProtocol):
         self.round = 0
 
     def recorded_vector(self):
-        if any(r is None for r in self.rec_own):
+        active = getattr(self, "_active", None)
+        if active is None:
+            active = [True] * len(self.rec_own)
+        if any(self.rec_own[i] is None
+               for i in range(len(self.rec_own)) if active[i]):
             return None
         return list(self.rec_own)
 
@@ -478,7 +661,13 @@ class ExactSnapshotFIFO(BaseProtocol):
         p = eng.p
         self.rec_own: List[Optional[np.ndarray]] = [None] * p
         self.rec_deps: List[Dict[int, np.ndarray]] = [dict() for _ in range(p)]
+        self._active = list(eng.active)
         self._reducing = False
+
+    def on_membership(self, eng: AsyncEngine, t: float, kind: str,
+                      worker: int) -> None:
+        self._active = list(eng.active)
+        self._new_round()
 
     def _new_round(self) -> None:
         self.round += 1
@@ -515,26 +704,32 @@ class ExactSnapshotFIFO(BaseProtocol):
 
     def _ready(self, eng: AsyncEngine, i: int) -> bool:
         return self.rec_own[i] is not None and all(
-            j in self.rec_deps[i] for j in eng.problem.neighbors(i)
+            j in self.rec_deps[i] or not eng.active[j]
+            for j in eng.problem.neighbors(i)
         )
 
     def _maybe_reduce(self, eng: AsyncEngine, t: float) -> None:
         if self._reducing or eng.detect_time is not None:
             return
-        if not all(self._ready(eng, i) for i in range(eng.p)):
+        members = eng.active_workers()
+        if not members or not all(self._ready(eng, i) for i in members):
             return
         self._reducing = True
         contribs = np.array(
             [
-                self._record_residual(eng, i, self.rec_own[i], self.rec_deps[i])
-                for i in range(eng.p)
+                self._record_residual(eng, i, self.rec_own[i],
+                                      self._record_deps_with_boundary(eng, i))
+                for i in members
             ]
         )
         eng.reductions_started += 1
         g = combine_contributions(contribs, self.ord)
         tc = t + self._reduce_latency(eng)
+        rnd = self.round
 
         def complete(tt: float) -> None:
+            if self.round != rnd:
+                return  # membership change invalidated this quorum mid-reduce
             if g < self.eps:
                 eng.terminate(tt, g)
             else:

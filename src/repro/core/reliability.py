@@ -79,6 +79,9 @@ class TraceRecorder:
         self.detect: Optional[Tuple[float, float]] = None   # (t, detected ε)
         self.true_at_detect: Optional[float] = None          # r(x̄) at detect
         self.certified_at_detect: Optional[float] = None     # r(record) if any
+        self.active_at_detect: Optional[float] = None        # r restricted to
+        #                                     the active membership at detect
+        self.membership: List[Tuple[float, str, int]] = []   # (t, kind, worker)
         self.claim: str = "live"                             # protocol claim
         self.result: Optional[RunResult] = None
         self._sweeps = 0
@@ -98,13 +101,36 @@ class TraceRecorder:
             self.events.append(("send", t, msg.src, msg.dst, msg.kind,
                                 deliver))
 
+    def on_membership(self, eng: AsyncEngine, t: float, kind: str,
+                      worker: int) -> None:
+        self.membership.append((t, kind, worker))
+        self.events.append(("member", t, kind, worker))
+
     def on_detect(self, eng: AsyncEngine, t: float, detected: float) -> None:
         self.detect = (t, float(detected))
         self.true_at_detect = float(eng.problem.exact_residual(eng.x))
         self.claim = getattr(eng.protocol, "claim", "live")
+        elastic = bool(getattr(eng, "membership_changes", 0)) or not all(
+            getattr(eng, "active", [True]))
+        if elastic:
+            # ground truth under dynamic membership: the active subsystem's
+            # residual (inactive blocks are frozen boundary data — Daggitt &
+            # Griffin's dynamic-iteration fixed point), which is what any
+            # claim made by the surviving membership is actually about
+            self.active_at_detect = float(eng.exact_active_residual())
         rec = getattr(eng.protocol, "recorded_vector", lambda: None)()
         if rec is not None:
-            self.certified_at_detect = float(eng.problem.exact_residual(rec))
+            if elastic:
+                # holes in the record are inactive workers: substitute
+                # their frozen live blocks and score the active subsystem
+                # of the assembled vector
+                assembled = [r if r is not None else eng.x[i]
+                             for i, r in enumerate(rec)]
+                self.certified_at_detect = float(
+                    eng.exact_active_residual(xs=assembled))
+            else:
+                self.certified_at_detect = float(
+                    eng.problem.exact_residual(rec))
         self.events.append(("detect", t, float(detected), self.true_at_detect,
                             self.certified_at_detect))
 
@@ -149,6 +175,9 @@ class DetectionReport:
     latency_overhead: Optional[float]  # t_detect − t_first_below (late-ness)
     claim: str = "live"           # what was scored: live state or a record
     certified_residual: Optional[float] = None  # r(recorded vector) if any
+    membership_changes: int = 0   # crash/join/restore events during the run
+    active_residual: Optional[float] = None  # r of the active subsystem at
+    #                               detect (None when membership never changed)
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -178,6 +207,7 @@ def detection_report(rec: TraceRecorder, eps: float,
     """
     eps = float(eps)
     t_first = next((t for t, r in rec.residual_samples if r <= eps), None)
+    n_member = len(rec.membership)
     if rec.detect is None:
         return DetectionReport(
             terminated=False, eps=eps,
@@ -185,13 +215,21 @@ def detection_report(rec: TraceRecorder, eps: float,
             overshoot=float("inf"), false_detection=False, factor=factor,
             t_detect=float("inf"), t_first_below=t_first,
             latency_overhead=None, claim=rec.claim,
+            membership_changes=n_member,
         )
     t_detect, claimed = rec.detect
     true_r = float(rec.true_at_detect)
     certified = rec.certified_at_detect
-    scored = (float(certified)
-              if rec.claim == "recorded" and certified is not None
-              else true_r)
+    active_r = rec.active_at_detect
+    if rec.claim == "recorded" and certified is not None:
+        scored = float(certified)
+    elif active_r is not None:
+        # dynamic membership: a live claim is made by (and about) the
+        # active subsystem — inactive blocks are boundary data, not part
+        # of the converging system
+        scored = float(active_r)
+    else:
+        scored = true_r
     return DetectionReport(
         terminated=True, eps=eps,
         detected_residual=claimed, true_at_detect=true_r,
@@ -203,6 +241,8 @@ def detection_report(rec: TraceRecorder, eps: float,
         claim=rec.claim,
         certified_residual=(float(certified) if certified is not None
                             else None),
+        membership_changes=n_member,
+        active_residual=(float(active_r) if active_r is not None else None),
     )
 
 

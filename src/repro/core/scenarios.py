@@ -62,6 +62,23 @@ class Effect:
     def paused_until(self, t: float, worker: int) -> Optional[float]:
         return None
 
+    # -- dynamic membership (static timelines, declared at construction) ---
+    def membership_events(self) -> Tuple[Tuple[float, str, int], ...]:
+        """``(t, kind, worker)`` membership transitions this effect injects
+        (kind ∈ {"crash", "join", "restore"}).  Static by design: the engine
+        schedules them as ordinary heap events at construction, so they
+        consume no RNG draws and a run stays a pure function of the seed."""
+        return ()
+
+    def initially_inactive(self) -> Tuple[int, ...]:
+        """Workers that start outside the membership (late joiners)."""
+        return ()
+
+    #: CheckpointRestart overrides this (as a real field) with its snapshot
+    #: cadence; a plain class attribute here so asdict()/describe() of the
+    #: existing effects is unchanged
+    checkpoint_every = None
+
 
 @dataclass(frozen=True)
 class TailSpike(Effect):
@@ -175,6 +192,92 @@ class Pause(Effect):
 
 
 # ---------------------------------------------------------------------------
+# Dynamic membership primitives (crash / join / checkpoint-restart)
+# ---------------------------------------------------------------------------
+#
+# Unlike Pause, these change the *participant set* itself (Daggitt &
+# Griffin's dynamic asynchronous iterations): a crashed worker performs no
+# further sweeps, sends nothing, loses every message addressed to it, and is
+# excluded from reductions and snapshot quorums; a joiner starts outside the
+# membership (its block frozen at x^0) and is admitted mid-run; a
+# checkpoint-restart crashes a worker and later re-admits it from the
+# engine's periodic state snapshots — the event-level twin of the device
+# runtime's crash → heartbeat-detect → restore → resume loop.
+
+
+@dataclass(frozen=True)
+class WorkerCrash(Effect):
+    """Worker ``worker`` fail-stops at ``at`` and never returns."""
+
+    worker: int = 0
+    at: float = 0.05
+
+    def __post_init__(self):
+        if self.worker < 0:
+            raise ValueError(f"WorkerCrash.worker={self.worker} must be >= 0")
+        if self.at < 0.0:
+            raise ValueError(f"WorkerCrash.at={self.at} must be >= 0")
+
+    def membership_events(self):
+        return ((self.at, "crash", self.worker),)
+
+
+@dataclass(frozen=True)
+class WorkerJoin(Effect):
+    """Worker ``worker`` starts *outside* the membership and is admitted at
+    ``at`` (elastic scale-up).  Its block stays frozen at the initial state
+    until then — neighbours keep iterating against the x^0 interface they
+    were seeded with, exactly as if the joiner's slot were a cold replica."""
+
+    worker: int = 0
+    at: float = 0.05
+
+    def __post_init__(self):
+        if self.worker < 0:
+            raise ValueError(f"WorkerJoin.worker={self.worker} must be >= 0")
+        if self.at < 0.0:
+            raise ValueError(f"WorkerJoin.at={self.at} must be >= 0")
+
+    def membership_events(self):
+        return ((self.at, "join", self.worker),)
+
+    def initially_inactive(self):
+        return (self.worker,)
+
+
+@dataclass(frozen=True)
+class CheckpointRestart(Effect):
+    """Worker ``worker`` crashes at ``at`` and is re-admitted after
+    ``downtime`` from the most recent periodic state snapshot (the engine
+    checkpoints every ``checkpoint_every`` of virtual time while any restart
+    effect is attached).  Progress since that snapshot is rolled back — the
+    recovery-cost regime the device runtime pays in real iterations."""
+
+    worker: int = 0
+    at: float = 0.05
+    downtime: float = 0.05
+    checkpoint_every: float = 0.02
+
+    def __post_init__(self):
+        if self.worker < 0:
+            raise ValueError(
+                f"CheckpointRestart.worker={self.worker} must be >= 0")
+        if self.at < 0.0:
+            raise ValueError(f"CheckpointRestart.at={self.at} must be >= 0")
+        if self.downtime <= 0.0:
+            raise ValueError(
+                f"CheckpointRestart.downtime={self.downtime} must be > 0")
+        if self.checkpoint_every <= 0.0:
+            raise ValueError(
+                f"CheckpointRestart.checkpoint_every="
+                f"{self.checkpoint_every} must be > 0")
+
+    def membership_events(self):
+        return ((self.at, "crash", self.worker),
+                (self.at + self.downtime, "restore", self.worker))
+
+
+# ---------------------------------------------------------------------------
 # Composition
 # ---------------------------------------------------------------------------
 
@@ -201,10 +304,39 @@ class Scenario:
         object.__setattr__(self, "pause_effects", tuple(
             e for e in self.effects
             if type(e).paused_until is not Effect.paused_until))
+        object.__setattr__(self, "membership_effects", tuple(
+            e for e in self.effects
+            if type(e).membership_events is not Effect.membership_events))
 
     @property
     def lossy(self) -> bool:
         return any(e.lossy for e in self.effects)
+
+    @property
+    def elastic(self) -> bool:
+        """True when any effect changes the participant set mid-run."""
+        return bool(self.membership_effects)
+
+    def membership_events(self) -> Tuple[Tuple[float, str, int], ...]:
+        """Time-sorted ``(t, kind, worker)`` transitions over all effects."""
+        out = []
+        for e in self.membership_effects:
+            out.extend(e.membership_events())
+        return tuple(sorted(out))
+
+    def initially_inactive(self) -> Tuple[int, ...]:
+        out = set()
+        for e in self.membership_effects:
+            out.update(e.initially_inactive())
+        return tuple(sorted(out))
+
+    @property
+    def checkpoint_every(self) -> Optional[float]:
+        """Tightest snapshot cadence any restart effect requires (None when
+        no effect restores from checkpoints)."""
+        cadences = [e.checkpoint_every for e in self.membership_effects
+                    if e.checkpoint_every is not None]
+        return min(cadences) if cadences else None
 
     def channel_delay(self, t: float, kind: str, delay: float,
                       rng: np.random.Generator) -> Optional[float]:
@@ -297,3 +429,62 @@ def standard_scenarios(base: float = 1e-3) -> Dict[str, ScenarioSpec]:
                          DropMessages(prob=1.0, kinds=("data",),
                                       after=30 * base)),
     }
+
+
+def elastic_scenarios(base: float = 1e-3) -> Dict[str, ScenarioSpec]:
+    """The dynamic-membership sweep (benchmarks/bench_elastic.py): crash,
+    join, checkpoint-restart and their compositions, all on the stable
+    platform so any detection failure is attributable to the membership
+    change itself.  Worker indices assume p >= 4 (the lab's standard
+    decomposition)."""
+
+    def spec(name, platform, *effects):
+        return ScenarioSpec(name, platform, Scenario(name, tuple(effects)))
+
+    # Timings are calibrated against the detection times of the benchmark
+    # lane (convdiff n=12 p=4 rho=0.9, eps=1e-6 at the problem's max-norm):
+    # with no faults every protocol detects at t ≈ (92–122)·base, so every
+    # event below lands at t < 90·base — each scenario's full membership
+    # sequence is guaranteed to be *in effect before any detection fires*,
+    # which is what makes the matrix a test of the protocols' bookkeeping
+    # rather than of event/detection racing.
+    return {
+        # fail-stop early (before any protocol has converged once)
+        "crash_early": spec("crash_early", "stable",
+                            WorkerCrash(worker=2, at=30 * base)),
+        # fail-stop late (snapshot rounds already in flight, detection near)
+        "crash_late": spec("crash_late", "stable",
+                           WorkerCrash(worker=1, at=80 * base)),
+        # two staggered crashes: membership shrinks twice (4 → 3 → 2)
+        "crash_two": spec("crash_two", "stable",
+                          WorkerCrash(worker=2, at=40 * base),
+                          WorkerCrash(worker=0, at=80 * base)),
+        # elastic scale-up: worker 3's block stays frozen at x^0 until
+        # admission — survivors converge toward the wrong (frozen-BC) fixed
+        # point first, then must re-converge with the joiner
+        "join_late": spec("join_late", "stable",
+                          WorkerJoin(worker=3, at=60 * base)),
+        # crash + checkpoint-restart: progress since the last periodic
+        # snapshot is rolled back on re-admission.  Downtime is short
+        # enough that the restore lands *before* the survivors' detection
+        # fires — the protocols must carry their bookkeeping through the
+        # full crash → restore → re-converge cycle
+        "crash_restart": spec("crash_restart", "stable",
+                              CheckpointRestart(worker=1, at=40 * base,
+                                                downtime=40 * base,
+                                                checkpoint_every=20 * base)),
+        # churn: a join and an independent checkpoint-restart overlap
+        "churn": spec("churn", "stable",
+                      WorkerJoin(worker=3, at=40 * base),
+                      CheckpointRestart(worker=1, at=60 * base,
+                                        downtime=40 * base,
+                                        checkpoint_every=20 * base)),
+    }
+
+
+def scenario_registry(base: float = 1e-3) -> Dict[str, ScenarioSpec]:
+    """Merged lookup: the reliability matrix's standard regimes plus the
+    elastic membership sweep (names are disjoint by construction)."""
+    out = standard_scenarios(base)
+    out.update(elastic_scenarios(base))
+    return out

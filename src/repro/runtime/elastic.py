@@ -1,14 +1,44 @@
-"""Elastic re-meshing: rebuild a mesh after membership changes and reshard
-a (topology-free) checkpoint onto it.
+"""Elastic re-meshing + the fault-injected shard-runtime driver.
 
-The checkpoint stores host arrays (checkpoint/checkpointer.py); resharding
-is a ``device_put`` with the new mesh's shardings, so scale-up/down only
-requires that the new mesh's model axis still divides the sharded dims —
-validated here before any data movement.
+Two layers:
+
+* **Mesh surgery** (`remesh` / `validate_specs` / `reshard`): rebuild a mesh
+  after membership changes and reshard a (topology-free) checkpoint onto it.
+  The checkpoint stores host arrays (checkpoint/checkpointer.py); resharding
+  is a ``device_put`` with the new mesh's shardings, so scale-up/down only
+  requires that the new mesh's axes still divide the sharded dims —
+  validated here before any data movement.
+
+* **Elastic control loop** (`run_elastic`): the crash → detect → restart →
+  resume cycle for the device-resident asynchronous shard runtime
+  (runtime/shard_runtime.py).  The solve is split into fixed-length
+  *segments* (one virtual time unit each); between segments the control
+  plane runs the production fault-tolerance policies **live**:
+
+    1. every alive shard heartbeats (`HeartbeatMonitor`) and reports its
+       segment duration (`StragglerPolicy`) — a shard killed by the
+       `FaultPlan` stops beating, and because the SPMD collective cannot
+       complete without it, the *whole job stalls* (no iterations happen)
+       until the failure is detected;
+    2. once the heartbeat timeout elapses, `plan_restart` drops the dead
+       shards, `shrink_to_fit` picks the largest usable shard count, and
+       the last committed checkpoint restores onto the shrunk mesh
+       (`Checkpointer.restore` + the new mesh's shardings) — rolling back
+       to the checkpointed outer iteration;
+    3. the runtime is rebuilt against the new mesh with the **unchanged
+       detection monitor** and iteration resumes.  Late joiners scale the
+       mesh back up from *live* state (a host gather + reshard — no
+       rollback, nothing to restore).
+
+  Crash detection is therefore paid in stalled segments and rolled-back
+  iterations — exactly the recovery cost ``benchmarks/bench_elastic.py``
+  reports next to each protocol's detection reliability.
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
@@ -53,3 +83,253 @@ def reshard(tree: Any, specs: Any, mesh: Mesh) -> Any:
         tree, specs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Elastic shard-runtime control loop
+# ---------------------------------------------------------------------------
+
+
+def shrink_to_fit(n: int, survivors: int, reduction: str = "nonblocking") -> int:
+    """Largest shard count ≤ ``survivors`` the runtime can actually use:
+    it must divide the block dimension ``n``, and the recursive-doubling
+    reduction additionally needs a power-of-two butterfly (the event-level
+    protocol folds remainders; the device twin keeps the classic
+    geometry)."""
+    if survivors < 1:
+        raise ValueError("no survivors to fit a mesh to")
+    for p in range(min(int(survivors), int(n)), 0, -1):
+        if n % p:
+            continue
+        if reduction == "rdoubling" and p & (p - 1):
+            continue
+        return p
+    raise ValueError(f"no usable shard count for n={n}, "
+                     f"survivors={survivors}, reduction={reduction!r}")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault schedule, in segment indices (virtual time).
+
+    ``crash_at[w] = s``  — worker w dies *during* segment s: the segment's
+                           collective never completes (its work is lost)
+                           and w never heartbeats again.
+    ``join_at[w] = s``   — standby worker w becomes available at the end of
+                           segment s (hot scale-up from live state).
+    ``slow[w] = f``      — worker w's reported segment duration is scaled
+                           by f (feeds the straggler policy; pure
+                           control-plane signal on an emulated mesh).
+    """
+
+    crash_at: Mapping[int, int] = field(default_factory=dict)
+    join_at: Mapping[int, int] = field(default_factory=dict)
+    slow: Mapping[int, float] = field(default_factory=dict)
+
+    def __post_init__(self):
+        for w, s in {**self.crash_at, **self.join_at}.items():
+            if w < 0 or s < 0:
+                raise ValueError(f"fault plan entry ({w}: {s}) must be >= 0")
+        both = set(self.crash_at) & set(self.join_at)
+        for w in both:
+            if self.join_at[w] <= self.crash_at[w]:
+                raise ValueError(
+                    f"worker {w} rejoins at segment {self.join_at[w]} but "
+                    f"only crashes at {self.crash_at[w]} — repair must "
+                    "follow the crash")
+
+
+@dataclass
+class ElasticReport:
+    """Outcome + recovery accounting of one elastic run."""
+
+    converged: bool
+    detected_residual: Optional[float]
+    outer_iters: int              # surviving outer iterations at the end
+    segments_run: int
+    restarts: int
+    stall_segments: int           # segments lost to undetected-crash stalls
+    lost_iters: int               # iterations rolled back to checkpoints
+    detect_latency: List[float]   # segments from each crash to its detection
+    checkpoint_saves: int
+    mesh_history: List[Tuple[int, int]]   # (segment, shard count) changes
+    stragglers_flagged: List[int]
+    members_final: Tuple[int, ...]
+    x: np.ndarray                 # final global solution (host)
+    events: List[Tuple[int, str, str]] = field(default_factory=list)
+
+
+def _arg_spec(family: str, axis: str) -> P:
+    if family == "convdiff":
+        return P(axis, None, None)
+    return P(axis, None)  # pagerank row-blocked operator
+
+
+def run_elastic(
+    family: str,
+    cfg,                       # ShardRuntimeConfig (scalar per-shard fields)
+    n: int,
+    x0: np.ndarray,
+    arg: np.ndarray,           # convdiff: rhs b | pagerank: dense operator
+    plan: FaultPlan,
+    ckpt_dir: str,
+    *,
+    stencil=None,
+    damping: float = 0.85,
+    p0: Optional[int] = None,
+    segment_len: int = 40,
+    ckpt_every: int = 2,
+    heartbeat_timeout: float = 2.2,
+    max_segments: int = 80,
+    straggler_policy=None,
+    keep: int = 3,
+) -> ElasticReport:
+    """Run the asynchronous shard runtime to convergence through the fault
+    plan.  See the module docstring for the control-loop semantics; notable
+    contracts:
+
+    * per-shard config fields must be scalars (the shard count changes
+      mid-run, so a length-p sequence cannot follow the mesh);
+    * ``cfg.max_outer`` is ignored — the driver owns segmentation
+      (``segment_len`` outers per segment, ``max_segments`` budget);
+    * the detection monitor config is reused unchanged across restarts
+      (its device state re-initialises inside each rebuilt program — the
+      in-flight reduction pipeline of a dead collective is not salvageable,
+      but the *policy* that decides termination never changes);
+    * a committed checkpoint of the initial state is written synchronously
+      before the first segment, so recovery is always possible.
+    """
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.launch.mesh import make_shard_mesh
+    from repro.runtime.fault_tolerance import (
+        HeartbeatMonitor, StragglerPolicy, plan_restart)
+    from repro.runtime.shard_runtime import make_runtime, state_spec
+
+    for name in ("inner_sweeps", "halo_delay", "contrib_lag"):
+        if not np.isscalar(getattr(cfg, name)):
+            raise ValueError(
+                f"elastic runs need scalar {name} (shard count changes)")
+    n_dev = len(jax.devices())
+    p0 = int(p0 if p0 is not None else n_dev)
+    if shrink_to_fit(n, p0, cfg.reduction) != p0:
+        raise ValueError(f"initial shard count p0={p0} unusable for n={n}, "
+                         f"reduction={cfg.reduction!r}")
+    axis = cfg.axis
+    xspec = state_spec(family, axis)
+    aspec = _arg_spec(family, axis)
+    x_host = np.asarray(x0)
+    arg_host = np.asarray(arg)
+
+    ck = Checkpointer(ckpt_dir, keep=keep)
+    hb = HeartbeatMonitor(timeout=float(heartbeat_timeout))
+    strag = straggler_policy or StragglerPolicy()
+    members: Tuple[int, ...] = tuple(range(p0))
+    hb.register(members, 0.0)
+    dead: set = set()
+    flagged: set = set()
+    report = ElasticReport(
+        converged=False, detected_residual=None, outer_iters=0,
+        segments_run=0, restarts=0, stall_segments=0, lost_iters=0,
+        detect_latency=[], checkpoint_saves=0, mesh_history=[],
+        stragglers_flagged=[], members_final=members, x=x_host)
+    crash_seen: Dict[int, int] = {}     # worker -> segment its crash landed
+
+    cfg_seg = dataclasses.replace(cfg, max_outer=int(segment_len))
+    compiled: Dict[int, Callable] = {}
+
+    def build(p_cur: int, seg: int):
+        """(Re)build the runtime + device placement for ``p_cur`` shards."""
+        mesh = make_shard_mesh(p_cur)
+        if p_cur not in compiled:
+            compiled[p_cur] = jax.jit(make_runtime(
+                family, cfg_seg, mesh, n, stencil=stencil, damping=damping))
+        x_dev = jax.device_put(x_host, NamedSharding(mesh, xspec))
+        arg_dev = jax.device_put(arg_host, NamedSharding(mesh, aspec))
+        report.mesh_history.append((seg, p_cur))
+        return compiled[p_cur], x_dev, arg_dev
+
+    p_cur = p0
+    run, x_dev, arg_dev = build(p_cur, 0)
+    ck.save(x_dev, step=0, blocking=True)   # recovery floor
+    report.checkpoint_saves += 1
+    outer_done = 0
+
+    for seg in range(int(max_segments)):
+        report.segments_run = seg + 1
+        t_end = float(seg + 1)
+        for w in members:
+            if w not in dead and plan.crash_at.get(w) == seg:
+                dead.add(w)
+                crash_seen[w] = seg
+                report.events.append((seg, "crash", f"worker {w}"))
+        stalled = any(w in dead for w in members[:p_cur])
+        if not stalled:
+            r = run(x_dev, arg_dev)
+            x_dev = r.x
+            outer_done += int(r.outer_iters)
+            if bool(r.converged):
+                report.converged = True
+                report.detected_residual = float(r.residual)
+                report.events.append((seg, "detect", f"g={r.residual:.3e}"))
+                break
+        else:
+            report.stall_segments += 1
+        # -- live control plane: heartbeats + straggler quantiles ----------
+        for w in members:
+            if w not in dead:
+                hb.beat(w, t_end)
+                strag.record(w, float(plan.slow.get(w, 1.0)))
+        flagged.update(strag.check())
+        failed = [w for w in hb.failed(t_end) if w in members]
+        if failed:
+            ck.wait()                     # flush (and surface) async saves
+            step = ck.latest_step() or 0
+            rplan = plan_restart(step, workers=members, failed=failed,
+                                 model_axis=1)
+            members = rplan.surviving_workers
+            report.lost_iters += max(outer_done - step, 0)
+            for w in failed:
+                report.detect_latency.append(
+                    t_end - float(crash_seen.get(w, seg)))
+            outer_done = step
+            p_cur = shrink_to_fit(n, min(len(members), n_dev),
+                                  cfg.reduction)
+            restored, _ = ck.restore(
+                step, like=0,
+                shardings=NamedSharding(make_shard_mesh(p_cur), xspec))
+            x_host = np.asarray(jax.device_get(restored))
+            run, x_dev, arg_dev = build(p_cur, seg + 1)
+            report.restarts += 1
+            report.events.append(
+                (seg, "restart", f"survivors={members} p={p_cur} "
+                                 f"rollback_to={step}"))
+            continue
+        joining = tuple(sorted(
+            w for w, s in plan.join_at.items()
+            if s <= seg and w not in members
+            and (w not in dead or s > plan.crash_at.get(w, -1))))
+        if joining and not stalled:
+            dead -= set(joining)          # a repaired worker rejoins clean
+            members = tuple(sorted(set(members) | set(joining)))
+            hb.register(joining, t_end)
+            # workers beyond the host's device count stay spares: members
+            # for the control plane, not shards of the mesh
+            p_new = shrink_to_fit(n, min(len(members), n_dev),
+                                  cfg.reduction)
+            report.events.append(
+                (seg, "join", f"workers {joining} p={p_cur}->{p_new}"))
+            if p_new != p_cur:
+                # hot scale-up: gather live state, reshard, keep iterating
+                x_host = np.asarray(jax.device_get(x_dev))
+                p_cur = p_new
+                run, x_dev, arg_dev = build(p_cur, seg + 1)
+        if not stalled and (seg + 1) % int(ckpt_every) == 0:
+            ck.save(x_dev, step=outer_done)       # async
+            report.checkpoint_saves += 1
+
+    ck.wait()
+    report.outer_iters = outer_done
+    report.members_final = members
+    report.stragglers_flagged = sorted(flagged)
+    report.x = np.asarray(jax.device_get(x_dev))
+    return report

@@ -29,6 +29,14 @@ class HeartbeatMonitor:
     timeout: float = 30.0
     _last: Dict[int, float] = field(default_factory=dict)
 
+    def register(self, workers: Sequence[int], t: float) -> None:
+        """Enroll workers at ``t`` without a beat: a worker that crashes
+        before its first heartbeat must still be declared failed once the
+        timeout elapses (registration is the virtual beat at enrollment).
+        Already-beating workers are left untouched."""
+        for w in workers:
+            self._last.setdefault(int(w), t)
+
     def beat(self, worker: int, t: float) -> None:
         self._last[worker] = t
 

@@ -421,6 +421,40 @@ def make_pagerank_runtime(cfg: ShardRuntimeConfig, mesh, n: int,
 
 
 # ---------------------------------------------------------------------------
+# Family dispatch (benchmarks + the elastic restart driver)
+# ---------------------------------------------------------------------------
+
+
+FAMILIES = ("convdiff", "pagerank")
+
+
+def make_runtime(family: str, cfg: ShardRuntimeConfig, mesh, n: int, *,
+                 stencil: Optional[Stencil] = None, damping: float = 0.85):
+    """``run(x0, problem_arg) -> ShardRunResult`` for a problem family.
+
+    One entry point for every caller that must rebuild the runtime against
+    a *changing* mesh (the elastic driver re-invokes it after each
+    remesh — per-shard config fields must then be scalars, since a
+    length-p sequence is pinned to the old shard count)."""
+    if family == "convdiff":
+        if stencil is None:
+            raise ValueError("convdiff runtime requires stencil=")
+        return make_convdiff_runtime(cfg, mesh, stencil, n)
+    if family == "pagerank":
+        return make_pagerank_runtime(cfg, mesh, n, damping)
+    raise KeyError(f"family {family!r} not in {FAMILIES}")
+
+
+def state_spec(family: str, axis: str = "shard") -> P:
+    """PartitionSpec of the solution array on a 1-D shard mesh."""
+    if family == "convdiff":
+        return P(axis, None, None)
+    if family == "pagerank":
+        return P(axis)
+    raise KeyError(f"family {family!r} not in {FAMILIES}")
+
+
+# ---------------------------------------------------------------------------
 # Synchronous references (parity oracles — tests/benchmarks)
 # ---------------------------------------------------------------------------
 

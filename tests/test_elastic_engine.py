@@ -1,0 +1,171 @@
+"""Dynamic-membership semantics of the event engine and the protocols'
+survival of crash / join / checkpoint-restart (the elastic matrix of
+benchmarks/bench_elastic.py at test scale).
+
+Ground-truth convention (Daggitt & Griffin): once membership changes, a
+crashed worker's block is frozen boundary data — detection claims are
+scored against the *active subsystem's* residual, with inactive
+neighbours pinned at each receiver's last *delivered* view (over non-FIFO
+channels the dead worker's final state is unobservable to any detector,
+oracle included).
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.async_engine import PLATFORMS, AsyncEngine
+from repro.core.protocols import PROTOCOLS
+from repro.core.reliability import (
+    TraceRecorder,
+    detection_report,
+    replay_matches,
+)
+from repro.core.scenarios import elastic_scenarios, scenario_registry
+from repro.solvers.convdiff import ConvDiffProblem
+
+BASE = 1e-3
+EPS = 1e-6
+#: membership changes each scenario must land *before* detection fires
+EXPECTED_CHANGES = {"crash_early": 1, "crash_late": 1, "crash_two": 2,
+                    "join_late": 1, "crash_restart": 2, "churn": 3}
+
+
+def _problem(seed=0):
+    return ConvDiffProblem(n=12, p=4, rho=0.9, seed=seed)
+
+
+def _cfg(spec, seed=0, fifo=False, max_iters=6000):
+    return dataclasses.replace(
+        PLATFORMS[spec.platform](BASE), seed=seed, max_iters=max_iters,
+        scenario=spec.scenario, fifo=fifo)
+
+
+def _run(scenario, protocol, seed=0):
+    spec = elastic_scenarios(BASE)[scenario]
+    cfg = _cfg(spec, seed=seed, fifo=(protocol == "exact_snapshot"))
+    rec = TraceRecorder(residual_stride=25, record_sends=False)
+    prob = _problem(seed)
+    eng = AsyncEngine(prob, cfg, PROTOCOLS[protocol](eps=EPS, ord=prob.ord),
+                      recorder=rec)
+    res = eng.run()
+    return eng, res, rec
+
+
+# ---------------------------------------------------------------------------
+# Engine membership mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contains_elastic_scenarios():
+    names = set(elastic_scenarios(BASE))
+    assert names == set(EXPECTED_CHANGES)
+    merged = set(scenario_registry(BASE))
+    assert names <= merged  # merged with the PR-2 standard regimes
+
+
+def test_crash_retires_worker_and_freezes_block():
+    eng, res, rec = _run("crash_early", "pfait")
+    assert res.terminated
+    assert [(k, w) for _, k, w in rec.membership] == [("crash", 2)]
+    assert not eng.active[2] and eng.active_workers() == [0, 1, 3]
+    # the survivors' detection is honest for the active subsystem even
+    # though the frozen block leaves the *full* residual far above eps
+    rep = detection_report(rec, EPS)
+    assert not rep.false_detection
+    assert rep.active_residual < 10 * EPS
+    assert eng.exact_active_residual() < eng.problem.exact_residual(eng.x)
+
+
+def test_join_admits_worker_and_starts_its_chain():
+    eng, res, rec = _run("join_late", "pfait")
+    assert res.terminated
+    assert [(k, w) for _, k, w in rec.membership] == [("join", 3)]
+    assert eng.active[3] and eng.k[3] > 0  # the joiner actually iterated
+    # after admission the joiner is an unknown again: the run may only
+    # detect once the FULL system re-converged
+    assert eng.problem.exact_residual(eng.x) < 10 * EPS
+
+
+def test_restore_rolls_back_and_detection_waits():
+    eng, res, rec = _run("crash_restart", "pfait")
+    assert res.terminated
+    kinds = [(k, w) for _, k, w in rec.membership]
+    assert kinds == [("crash", 1), ("restore", 1)]
+    t_restore = rec.membership[1][0]
+    # detection must postdate the restore: the rollback reopens the gap,
+    # and PFAIT flushes reduction chains sampled under the old membership
+    assert rec.detect is not None and rec.detect[0] > t_restore
+    assert not detection_report(rec, EPS).false_detection
+
+
+def test_active_residual_equals_exact_when_membership_static():
+    prob = _problem()
+    cfg = dataclasses.replace(PLATFORMS["stable"](BASE), seed=0,
+                              max_iters=6000)
+    eng = AsyncEngine(prob, cfg, PROTOCOLS["pfait"](eps=EPS, ord=prob.ord))
+    res = eng.run()
+    assert res.terminated
+    full = prob.exact_residual(eng.x)
+    active = eng.exact_active_residual()
+    assert active == pytest.approx(full, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Protocol survival (every detector, the compound scenarios)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", sorted(PROTOCOLS))
+@pytest.mark.parametrize("scenario", ["crash_two", "churn"])
+def test_protocols_survive_compound_membership(protocol, scenario):
+    eng, res, rec = _run(scenario, protocol)
+    rep = detection_report(rec, EPS)
+    assert res.terminated, f"{protocol} never detected under {scenario}"
+    assert not rep.false_detection
+    assert rep.membership_changes == EXPECTED_CHANGES[scenario]
+
+
+def test_snapshot_vector_has_boundary_holes_after_crash():
+    eng, res, rec = _run("crash_early", "nfais2")
+    rep = detection_report(rec, EPS)
+    assert res.terminated and not rep.false_detection
+    assert rep.claim == "recorded"
+    # the certified (recorded) vector is scored against the active
+    # subsystem with the dead worker's block as boundary data
+    assert rep.certified_residual is not None
+    assert rep.certified_residual < 10 * EPS
+
+
+def test_rdub_refolds_after_crash_to_odd_membership():
+    # 4 workers -> crash -> 3: the butterfly must fold the remainder rank
+    # (q=2, rem=1) under a fresh generation, with epoch counters restarted
+    # from a common base
+    eng, res, rec = _run("crash_early", "rdub")
+    assert res.terminated
+    assert not detection_report(rec, EPS).false_detection
+    assert len(eng.protocol.members) == 3
+
+
+def test_elastic_run_replays_deterministically():
+    spec = elastic_scenarios(BASE)["churn"]
+    cfg = _cfg(spec, seed=2)
+    assert replay_matches(
+        lambda: _problem(2), cfg,
+        lambda pr: PROTOCOLS["pfait"](eps=EPS, ord=pr.ord),
+        residual_stride=25)
+
+
+def test_static_timeline_unchanged_by_elastic_effects():
+    """Membership events draw nothing from the RNG stream: a scenario's
+    fault timeline is static, so two scenarios with the same initial
+    membership share every compute/communication draw until the first
+    fault lands (the PR-2 no-detection-protocol invariant extended to
+    membership — crash_early fires at 30·base, crash_late at 80·base)."""
+    _, res_a, rec_a = _run("crash_early", "pfait", seed=3)
+    _, res_b, rec_b = _run("crash_late", "pfait", seed=3)
+    t_first_fault = 30 * BASE
+    sweeps_a = [e for e in rec_a.events
+                if e[0] == "sweep" and e[1] < t_first_fault]
+    sweeps_b = [e for e in rec_b.events
+                if e[0] == "sweep" and e[1] < t_first_fault]
+    assert sweeps_a and sweeps_a == sweeps_b

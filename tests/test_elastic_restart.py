@@ -1,0 +1,314 @@
+"""Elastic restart machinery: remesh/reshard spec validation, restart
+planning edge cases, Checkpointer round-trips (view-dtype encoding,
+topology-changing restore, async failure propagation) and the
+fault-injected driver (`runtime.elastic.run_elastic`).
+
+The pytest session runs on ONE device (tests/conftest.py): in-process
+driver tests use a 1-shard mesh; the real crash -> heartbeat -> shrink ->
+restore -> resume cycle needs >= 2 surviving shards and runs in a
+forced-4-device subprocess, marked ``slow`` (the elastic-smoke CI lane
+covers it at full size).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, _parse_step
+from repro.core import detection
+from repro.runtime import elastic
+from repro.runtime.elastic import (
+    FaultPlan,
+    remesh,
+    reshard,
+    run_elastic,
+    shrink_to_fit,
+    validate_specs,
+)
+from repro.runtime.fault_tolerance import HeartbeatMonitor, plan_restart
+from repro.runtime.shard_runtime import ShardRuntimeConfig
+from repro.solvers.convdiff import Stencil, make_rhs
+
+P = jax.sharding.PartitionSpec
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# remesh / reshard spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_remesh_shapes():
+    mesh = remesh(1, model_axis=1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+def test_validate_specs_accepts_and_rejects_divisibility():
+    mesh = remesh(1, model_axis=1)
+    ok = jax.ShapeDtypeStruct((8, 4), jnp.float32)
+    bad = jax.ShapeDtypeStruct((7, 4), jnp.float32)
+    assert validate_specs(ok, P("model", None), mesh)
+    assert validate_specs(bad, P("model", None), mesh)  # 7 % 1 == 0
+    # a 1-device session cannot build a 2-wide mesh; validate_specs only
+    # reads mesh.shape, so a stand-in exercises the rejection branch
+    class TwoWide:
+        shape = {"data": 1, "model": 2}
+    assert not validate_specs(bad, P("model", None), TwoWide())
+    assert validate_specs(jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                          P("model", None), TwoWide())
+
+
+def test_reshard_places_host_arrays():
+    mesh = remesh(1, model_axis=1)
+    tree = {"w": np.arange(8.0).reshape(8, 1)}
+    out = reshard(tree, {"w": P("model", None)}, mesh)
+    assert isinstance(out["w"], jax.Array)
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# plan_restart edge cases + shrink_to_fit
+# ---------------------------------------------------------------------------
+
+
+def test_plan_restart_fewer_survivors_than_model_axis():
+    plan = plan_restart(checkpoint_step=10, workers=range(8),
+                        failed=[0, 1, 2, 3, 4], model_axis=16)
+    assert plan.surviving_workers == (5, 6, 7)
+    assert plan.new_mesh_shape == (1, 3)  # model axis collapses to fit
+    assert plan.world_size == 3
+    assert plan.data_resume_step == 10
+
+
+def test_plan_restart_zero_survivors_raises():
+    with pytest.raises(RuntimeError, match="no survivors"):
+        plan_restart(checkpoint_step=5, workers=[0, 1], failed=[0, 1])
+
+
+def test_plan_restart_none_checkpoint_resumes_from_zero():
+    plan = plan_restart(checkpoint_step=None, workers=[0, 1, 2],
+                        failed=[2], model_axis=1)
+    assert plan.checkpoint_step == 0 and plan.data_resume_step == 0
+
+
+def test_shrink_to_fit_divisibility_and_butterfly():
+    assert shrink_to_fit(24, 4) == 4
+    assert shrink_to_fit(24, 5) == 4          # 5 does not divide 24
+    assert shrink_to_fit(24, 3) == 3
+    assert shrink_to_fit(24, 3, "rdoubling") == 2   # power-of-two only
+    assert shrink_to_fit(24, 7, "rdoubling") == 4
+    with pytest.raises(ValueError, match="survivors"):
+        shrink_to_fit(24, 0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer: view dtypes, topology change, failure propagation, GC
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_view_dtype_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = {
+        "bf16": np.arange(6, dtype=ml_dtypes.bfloat16).reshape(2, 3),
+        "fp8": np.linspace(-2, 2, 8).astype(ml_dtypes.float8_e4m3fn),
+        "f32": np.ones((3,), np.float32),
+    }
+    ck.save(state, step=1, blocking=True)
+    out, step = ck.restore(like=state)
+    assert step == 1
+    for k in state:
+        assert out[k].dtype == state[k].dtype
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(state[k]))
+
+
+def test_checkpoint_topology_changing_restore(tmp_path):
+    """Save from one layout, restore onto another mesh's shardings — the
+    checkpoint itself is topology-free host data."""
+    ck = Checkpointer(str(tmp_path))
+    x = jnp.arange(12.0).reshape(12, 1)
+    ck.save({"x": x}, step=3, blocking=True)
+    mesh = remesh(1, model_axis=1)
+    sharding = {"x": jax.sharding.NamedSharding(mesh, P("model", None))}
+    out, step = ck.restore(like={"x": x}, shardings=sharding)
+    assert step == 3
+    assert out["x"].sharding.is_equivalent_to(sharding["x"], ndim=2)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(x))
+
+
+def test_async_save_failure_raises_from_wait(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path))
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr("repro.checkpoint.checkpointer.np.save", boom)
+    ck.save({"x": np.ones(3)}, step=1)  # async: failure lands on the thread
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        ck.wait()
+    # the error is consumed: a subsequent save/wait cycle works again
+    monkeypatch.undo()
+    ck.save({"x": np.ones(3)}, step=2, blocking=True)
+    assert ck.latest_step() == 2
+
+
+def test_async_save_failure_raises_from_next_save(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path))
+    monkeypatch.setattr("repro.checkpoint.checkpointer.np.save",
+                        lambda *a, **kw: (_ for _ in ()).throw(OSError("x")))
+    ck.save({"x": np.ones(3)}, step=1)
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        ck.save({"x": np.ones(3)}, step=2)
+
+
+def test_malformed_step_dirs_are_ignored(tmp_path):
+    assert _parse_step("step_000010") == 10
+    for name in ("step_abc", "step_", "notastep", "step_00002.tmp"):
+        assert _parse_step(name) is None
+    ck = Checkpointer(str(tmp_path), keep=1)
+    for name in ("step_abc", "notastep", "step_00002.tmp"):
+        os.makedirs(tmp_path / name)
+    (tmp_path / "README").write_text("stray file")
+    assert ck.latest_step() is None
+    ck.save({"x": np.ones(2)}, step=1, blocking=True)
+    ck.save({"x": np.ones(2)}, step=2, blocking=True)  # triggers _gc
+    assert ck.latest_step() == 2
+    # foreign entries survive GC untouched
+    assert (tmp_path / "step_abc").exists()
+    assert (tmp_path / "README").exists()
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor.register
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_register_counts_as_enrollment_beat():
+    hb = HeartbeatMonitor(timeout=2.0)
+    hb.register([0, 1], t=0.0)
+    assert hb.failed(1.0) == []          # within timeout, never beat
+    assert sorted(hb.failed(5.0)) == [0, 1]   # silent past timeout
+    hb.beat(1, 5.0)
+    assert hb.failed(6.0) == [0]
+
+
+def test_heartbeat_register_preserves_existing_beats():
+    hb = HeartbeatMonitor(timeout=2.0)
+    hb.beat(0, 10.0)
+    hb.register([0, 1], t=0.0)           # must not rewind worker 0
+    assert hb.failed(11.0) == [1]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan validation + run_elastic (1-device in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultPlan(crash_at={-1: 3})
+    with pytest.raises(ValueError, match="repair must"):
+        FaultPlan(crash_at={1: 5}, join_at={1: 2})
+    FaultPlan(crash_at={1: 2}, join_at={1: 6})  # repair after crash: ok
+
+
+def _elastic_cfg(mode="pfait", eps_tilde=1e-6):
+    mon = detection.for_mode(mode, eps_tilde=eps_tilde, margin=10.0,
+                             staleness=1, persistence=2, ord=2.0)
+    return ShardRuntimeConfig(monitor=mon, reduction="nonblocking",
+                              inner_sweeps=1, halo_delay=0, contrib_lag=1)
+
+
+def test_run_elastic_rejects_per_shard_sequences(tmp_path):
+    mon = detection.for_mode("pfait", eps_tilde=1e-6, ord=2.0)
+    cfg = ShardRuntimeConfig(monitor=mon, inner_sweeps=(1, 2, 1, 2))
+    with pytest.raises(ValueError, match="scalar inner_sweeps"):
+        run_elastic("convdiff", cfg, 8, np.zeros((8, 8, 8)),
+                    np.zeros((8, 8, 8)), FaultPlan(), str(tmp_path), p0=1)
+
+
+def test_run_elastic_uninterrupted_converges(tmp_path):
+    n = 8
+    st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.9)
+    b = make_rhs(n, seed=0)
+    rep = run_elastic("convdiff", _elastic_cfg(), n, np.zeros_like(b), b,
+                      FaultPlan(), str(tmp_path), stencil=st, p0=1,
+                      segment_len=25, max_segments=40)
+    assert rep.converged and rep.restarts == 0 and rep.stall_segments == 0
+    assert rep.detected_residual < 1e-5
+    assert rep.mesh_history == [(0, 1)]
+    assert rep.checkpoint_saves >= 1      # the synchronous recovery floor
+    assert rep.x.shape == b.shape
+
+
+def test_run_elastic_spare_join_keeps_mesh(tmp_path):
+    """A joiner beyond the host's device budget becomes a control-plane
+    spare: membership grows, the mesh cannot."""
+    n = 8
+    st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.9)
+    b = make_rhs(n, seed=0)
+    rep = run_elastic("convdiff", _elastic_cfg(), n, np.zeros_like(b), b,
+                      FaultPlan(join_at={1: 1}), str(tmp_path), stencil=st,
+                      p0=1, segment_len=25, max_segments=40)
+    assert rep.converged
+    assert rep.members_final == (0, 1)
+    assert rep.mesh_history == [(0, 1)]
+    assert any(ev[1] == "join" for ev in rep.events)
+
+
+# ---------------------------------------------------------------------------
+# The real crash -> heartbeat -> shrink -> restore cycle (4 devices)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_PROGRAM = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=4")
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro.core import detection
+    from repro.runtime.elastic import FaultPlan, run_elastic
+    from repro.runtime.shard_runtime import ShardRuntimeConfig
+    from repro.solvers.convdiff import Stencil, make_rhs
+
+    assert len(jax.devices()) == 4
+    n = 24
+    st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.9)
+    b = make_rhs(n, seed=0)
+    mon = detection.for_mode("pfait", eps_tilde=1e-6, margin=10.0,
+                             staleness=2, persistence=4, ord=2.0)
+    cfg = ShardRuntimeConfig(monitor=mon, reduction="nonblocking",
+                             inner_sweeps=2, halo_delay=1, contrib_lag=1)
+    plan = FaultPlan(crash_at={1: 3}, join_at={1: 8})
+    with tempfile.TemporaryDirectory() as d:
+        rep = run_elastic("convdiff", cfg, n, np.zeros_like(b), b, plan, d,
+                          stencil=st, p0=4, segment_len=10, ckpt_every=2,
+                          max_segments=60)
+    assert rep.converged, "never detected after restart"
+    assert rep.restarts == 1, rep.restarts
+    assert rep.stall_segments >= 1, "crash did not stall the collective"
+    assert rep.lost_iters > 0, "restart did not roll back"
+    assert rep.detect_latency and rep.detect_latency[0] > 0
+    ps = [p for _, p in rep.mesh_history]
+    assert ps[0] == 4 and 3 in ps and ps[-1] == 4, ps  # shrink then regrow
+    assert rep.members_final == (0, 1, 2, 3)
+    print("ELASTIC_SUBPROCESS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_crash_restart_resume_on_four_devices():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_PROGRAM],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "ELASTIC_SUBPROCESS_OK" in proc.stdout
