@@ -57,6 +57,8 @@ FINGERPRINT_PATHS: Tuple[str, ...] = (
     "benchmarks/common.py",
     "benchmarks/bench_fused.py",
     "benchmarks/bench_shard_runtime.py",
+    "benchmarks/bench_elastic.py",
+    "benchmarks/bench_ml.py",
 )
 
 
@@ -64,11 +66,21 @@ def code_fingerprint(
     root: Optional[os.PathLike] = None,
     paths: Sequence[str] = FINGERPRINT_PATHS,
 ) -> str:
-    """SHA-256 over the result-defining sources (sorted, path-prefixed)."""
+    """SHA-256 over the result-defining sources (sorted, path-prefixed).
+
+    A listed path that does not exist under ``root`` hashes as a distinct
+    "missing" marker rather than erroring: partial trees (tests, sparse
+    checkouts) stay fingerprintable, and creating the file later still
+    changes the key.
+    """
     h = hashlib.sha256()
     base = Path(root) if root is not None else REPO_ROOT
     for rel in paths:
         p = base / rel
+        if not p.exists():
+            h.update(rel.encode())
+            h.update(b"\0missing\0")
+            continue
         files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
         for f in files:
             h.update(str(f.relative_to(base)).encode())

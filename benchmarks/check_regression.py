@@ -41,6 +41,14 @@ Metrics and tolerances (the CI contract):
     is the recovery cost; paying more than the baseline is the regression,
     recovering cheaper is not.
 
+* ``ml_smoke`` (BENCH_ml_smoke.json):
+  - per-cell ``terminated`` / ``false_detection`` of the ML event protocol
+    matrix AND the async-SGD train matrix — exact (seeded, deterministic),
+  - train ``oracle_consistent`` — exact: the protocol-free detection round
+    must stay within the synchronized-eval oracle's decade,
+  - train ``detected_round`` — exact (seeded device programs are
+    deterministic; a drifting round means the monitor wiring changed).
+
 Usage:
   python benchmarks/check_regression.py fused_smoke \
       --baseline benchmarks/baselines/BENCH_fused_smoke.json \
@@ -216,11 +224,52 @@ def _elastic_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
                    float(fcell["lost_iters"]), "ceil", 0.30)
 
 
+def _ml_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
+    def event_cells(rep):
+        return {(c["task"], c["protocol"], c["seed"]): c
+                for c in rep["event"]}
+
+    fresh_ev = event_cells(fresh)
+    for key, bcell in sorted(event_cells(base).items()):
+        fcell = fresh_ev[key]
+        name = "/".join(str(k) for k in key)
+        yield (f"event.{name}.terminated", float(bcell["terminated"]),
+               float(fcell["terminated"]), "exact", 0.0)
+        yield (f"event.{name}.false_detection",
+               float(bcell["false_detection"]),
+               float(fcell["false_detection"]), "exact", 0.0)
+
+    def train_cells(rep):
+        return {(c["task"], c["reduction"], c["mode"], c["seed"]): c
+                for c in rep["train"]}
+
+    fresh_tr = train_cells(fresh)
+    for key, bcell in sorted(train_cells(base).items()):
+        fcell = fresh_tr[key]
+        name = "/".join(str(k) for k in key)
+        yield (f"train.{name}.terminated", float(bcell["terminated"]),
+               float(fcell["terminated"]), "exact", 0.0)
+        yield (f"train.{name}.false_detection",
+               float(bcell["false_detection"]),
+               float(fcell["false_detection"]), "exact", 0.0)
+        # the headline claim: the protocol-free detection round stays
+        # within the synchronized-eval oracle's decade
+        yield (f"train.{name}.oracle_consistent",
+               float(bcell["oracle_consistent"]),
+               float(fcell["oracle_consistent"]), "exact", 0.0)
+        # seeded device programs are deterministic: the detection round
+        # itself must not drift
+        yield (f"train.{name}.detected_round",
+               float(bcell["detected_round"] or -1),
+               float(fcell["detected_round"] or -1), "exact", 0.0)
+
+
 BENCHES = {
     "fused_smoke": _fused_smoke,
     "reliability_smoke": _reliability_smoke,
     "shard_smoke": _shard_smoke,
     "elastic_smoke": _elastic_smoke,
+    "ml_smoke": _ml_smoke,
 }
 
 

@@ -39,6 +39,13 @@ def make_problem(family: str, seed: int = 0, **kw):
 
         return PageRankProblem(n=kw.get("n", 256), p=kw.get("p", 4),
                                damping=kw.get("damping", 0.85), seed=seed)
+    if family == "mlfixed":
+        from repro.solvers.mlfixed import MLFixedPointProblem
+
+        return MLFixedPointProblem(
+            n=kw.get("n", 16), p=kw.get("p", 4),
+            m_rows=kw.get("m_rows", 64), task=kw.get("task", "lstsq"),
+            l2=kw.get("l2", 1e-2), cond=kw.get("cond", 20.0), seed=seed)
     raise KeyError(family)
 
 
@@ -338,6 +345,22 @@ def _cell_detection_grid(family: str, mode: str, seeds, T: int,
                         dtype=jnp.float32)
         def step_fn(X, P=P):
             return p0.update_with_residual_batched(X, P=P)
+    elif family == "mlfixed":
+        n = problem["n"]
+        x0 = jnp.zeros((len(probs), n), jnp.float32)
+        gam = jnp.asarray([pr.gamma for pr in probs], jnp.float32)
+        if p0.task == "lstsq":
+            H = jnp.asarray(np.stack([pr.H for pr in probs]), jnp.float32)
+            c = jnp.asarray(np.stack([pr.c for pr in probs]), jnp.float32)
+            def step_fn(X, H=H, c=c, gam=gam):
+                return p0.update_with_residual_batched(X, H=H, c=c,
+                                                       gamma=gam)
+        else:
+            A = jnp.asarray(np.stack([pr.A for pr in probs]), jnp.float32)
+            s = jnp.asarray(np.stack([pr.s for pr in probs]), jnp.float32)
+            def step_fn(X, A=A, s=s, gam=gam):
+                return p0.update_with_residual_batched(X, A=A, s=s,
+                                                       gamma=gam)
     else:
         raise KeyError(family)
     series = detection.contribution_series(step_fn, x0, T)
@@ -444,3 +467,25 @@ def _cell_elastic_device(**kw) -> Dict:
     from benchmarks.bench_elastic import elastic_device
 
     return elastic_device(**kw)
+
+
+# -- ML-workload cells (benchmarks/bench_ml.py) ------------------------------
+
+
+@cell_kind("ml_event", env=("numpy",), cost=_reliability_cost)
+def _cell_ml_event(**kw) -> Dict:
+    """One traced event-sim run of the ML fixed-point family, oracle-scored
+    for false detections (the BENCH_ml protocol matrix)."""
+    from benchmarks.bench_ml import ml_event
+
+    return ml_event(**kw)
+
+
+@cell_kind("ml_train", env=("jax",),
+           cost=lambda s: s.get("max_rounds", 20000))
+def _cell_ml_train(**kw) -> Dict:
+    """One async data-parallel SGD run on real shards (needs a multi-device
+    platform), detection step scored against the synchronized-eval oracle."""
+    from benchmarks.bench_ml import ml_train
+
+    return ml_train(**kw)

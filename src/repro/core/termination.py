@@ -64,3 +64,43 @@ def stability_band(residuals: Sequence[float], eps: float) -> tuple:
     """The paper's platform-stability summary: (min r*−ε, max r*−ε)."""
     rs = list(residuals)
     return (min(rs) - eps, max(rs) - eps)
+
+
+# ---------------------------------------------------------------------------
+# Oracle scoring (stochastic / ML residual traces)
+# ---------------------------------------------------------------------------
+
+
+def oracle_detect_step(residuals: Sequence[float], eps: float):
+    """First index where the exact residual trace crosses below ε — the
+    step a synchronized eval would have stopped at — or None if it never
+    does.  This is the ground truth an asynchronous detection step is
+    scored against."""
+    for k, r in enumerate(residuals):
+        if float(r) < eps:
+            return k
+    return None
+
+
+def detection_consistent(
+    detected_step: int,
+    residuals: Sequence[float],
+    eps: float,
+    factor: float = 10.0,
+) -> bool:
+    """Decade-consistency of a detection against an exact residual trace.
+
+    Stochastic residuals (minibatch SGD) wander within a band rather than
+    decrease monotonically, so exact step equality with the synchronized
+    oracle is the wrong test.  The paper's decade convention instead asks
+    that at the detected step the *true* residual was already within one
+    decade of ε: r_exact[min(k, end)] < factor·ε, and that the oracle
+    crossing exists at all (no false detection on a non-converging run).
+    """
+    oracle = oracle_detect_step(residuals, eps)
+    if oracle is None:
+        return False
+    if detected_step is None:
+        return False
+    k = min(int(detected_step), len(residuals) - 1)
+    return float(residuals[k]) < factor * eps

@@ -11,7 +11,7 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Dict, Iterator
+from typing import Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,14 +40,14 @@ def synth_batch(cfg: DataConfig, step: int, batch: int, seq: int,
     rng = _rng_for(cfg.seed, step, shard)
     if cfg.frontend_dim > 0:
         inputs = rng.standard_normal((batch, seq, cfg.frontend_dim)).astype(np.float32)
+        # embedding-frontend targets are synthetic classes: independent
+        # draws, no next-token shift (rolling random labels is a no-op)
+        labels = rng.integers(0, cfg.vocab_size, (batch, seq)).astype(np.int32)
     else:
         z = rng.zipf(cfg.zipf_a, size=(batch, seq)).astype(np.int64)
         inputs = np.minimum(z - 1, cfg.vocab_size - 1).astype(np.int32)
-    labels = np.roll(inputs if cfg.frontend_dim == 0 else
-                     rng.integers(0, cfg.vocab_size, (batch, seq)),
-                     -1, axis=-1).astype(np.int32)
-    if cfg.frontend_dim == 0:
         labels = np.roll(inputs, -1, axis=-1).astype(np.int32)
+        labels[:, -1] = -1   # wraparound position carries no target
     return {"inputs": inputs, "labels": labels}
 
 
@@ -58,6 +58,7 @@ class Prefetcher:
         self._make = make_batch
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._step = start_step
+        self._error: Optional[BaseException] = None
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
@@ -66,16 +67,33 @@ class Prefetcher:
         step = self._step
         while not self._stop.is_set():
             try:
-                self._q.put((step, self._make(step)), timeout=0.2)
-                step += 1
-            except queue.Full:
-                continue
+                item = (step, self._make(step))
+            except BaseException as e:   # surface producer death to __next__
+                self._error = e
+                self._stop.set()
+                return
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.2)
+                    step += 1
+                    break
+                except queue.Full:
+                    continue
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        return self._q.get()
+        while True:
+            try:
+                return self._q.get(timeout=0.2)
+            except queue.Empty:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "Prefetcher producer thread died") from self._error
+                if self._stop.is_set():
+                    raise StopIteration   # closed and drained
+                # producer alive and queue momentarily empty: keep waiting
 
     def close(self):
         self._stop.set()

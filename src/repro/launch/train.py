@@ -40,6 +40,8 @@ def train(
     target_loss: Optional[float] = None,
     monitor_mode: str = "pfait",
     staleness: int = 4,
+    margin: float = 10.0,
+    monitor_metric: str = "loss",
     ckpt_dir: Optional[str] = None,
     ckpt_every: int = 50,
     seed: int = 0,
@@ -52,15 +54,19 @@ def train(
     shape = ShapeConfig("custom", seq_len=seq, global_batch=batch, kind="train")
     model = Model(cfg, mesh=mesh)
     opt = AdamW(cosine_schedule(3e-3, max(steps // 20, 1), steps))
-    monitor = detection.MonitorConfig(
-        mode=monitor_mode,
-        eps=target_loss if target_loss is not None else 0.0,
+    # the shared ε̃/margin convention (core/detection.for_mode): PFAIT
+    # detects at the *tightened* threshold ε = ε̃ / margin, every other
+    # mode at ε̃ itself
+    monitor = detection.for_mode(
+        monitor_mode,
         eps_tilde=target_loss if target_loss is not None else 0.0,
+        margin=margin,
         staleness=0 if monitor_mode == "sync" else staleness,
         persistence=4,
         ord=1.0,   # scalar metric: σ = identity
     )
-    step_fn, _ = model.make_train_step(opt, monitor=monitor)
+    step_fn, _ = model.make_train_step(opt, monitor=monitor,
+                                       monitor_metric=monitor_metric)
     step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
@@ -82,13 +88,17 @@ def train(
                 break
             ts = time.time()
             state, metrics = step_fn(state, batch_arrays)
-            stragglers.record(0, time.time() - ts)
             # --- PFAIT-style non-blocking monitoring -------------------
             # metrics stay on device; we only *fetch* the previous step's
             # (already materialised) values — never a sync on this step.
             if pending_metrics is not None:
-                prev_step, prev = pending_metrics
+                prev_step, prev, prev_ts = pending_metrics
                 loss = float(prev["loss"])
+                # the fetch above materialised step ``prev_step``: its
+                # dispatch→completion wall time is the step duration the
+                # straggler policy needs (timing the async dispatch itself
+                # measures ~0 ms of enqueue latency)
+                stragglers.record(0, time.time() - prev_ts)
                 losses.append(loss)
                 if prev_step % log_every == 0:
                     print(f"[train] step {prev_step:5d} loss {loss:.4f} "
@@ -98,7 +108,7 @@ def train(
                     print(f"[train] monitor fired at step {prev_step} "
                           f"(mode={monitor_mode}, K={monitor.staleness})")
                     break
-            pending_metrics = (step, metrics)
+            pending_metrics = (step, metrics, ts)
             if ckpt and step > 0 and step % ckpt_every == 0:
                 # tag = next data step: resume replays nothing, skips nothing
                 ckpt.save(state, step + 1)
@@ -113,6 +123,8 @@ def train(
         "steps_run": int(state.step),
         "stop_step": stop_step,
         "wall_s": wall,
+        "stragglers": stragglers,
+        "monitor": monitor,
     }
 
 
@@ -127,6 +139,10 @@ def main() -> None:
     ap.add_argument("--target-loss", type=float, default=None)
     ap.add_argument("--monitor", default="pfait", choices=["sync", "pfait", "nfais2", "nfais5"])
     ap.add_argument("--staleness", type=int, default=4)
+    ap.add_argument("--margin", type=float, default=10.0,
+                    help="PFAIT threshold margin: detect at eps = target/margin")
+    ap.add_argument("--monitor-metric", default="loss",
+                    choices=["loss", "update_norm", "grad_norm"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -134,6 +150,7 @@ def main() -> None:
         args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
         use_reduced=args.reduced, target_loss=args.target_loss,
         monitor_mode=args.monitor, staleness=args.staleness,
+        margin=args.margin, monitor_metric=args.monitor_metric,
         ckpt_dir=args.ckpt_dir, seed=args.seed,
     )
     print(f"[train] done: {out['steps_run']} steps in {out['wall_s']:.1f}s; "

@@ -27,7 +27,7 @@ from repro.models import attention as attn_mod
 from repro.models import layers as L
 from repro.models import ssm as ssm_mod
 from repro.models.transformer import LayerCtx, forward, init_params, make_plan
-from repro.optim.adamw import AdamState, AdamW, apply_updates
+from repro.optim.adamw import AdamState, AdamW, apply_updates, global_norm
 
 
 class TrainState(NamedTuple):
@@ -269,13 +269,19 @@ class Model:
             # (take_along_axis would force an all-gather of the logits)
             sel = jnp.arange(vpad)[None, None, :] == lb[..., None]
             gold = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
-            return jnp.sum(lse - gold)
+            valid = lb >= 0   # -1 = no target (sequence wraparound)
+            return (jnp.sum(jnp.where(valid, lse - gold, 0.0)),
+                    jnp.sum(valid.astype(jnp.float32)))
 
-        def scan_body(tot, idx):
-            return tot + chunk_nll(xc[:, idx], lc[:, idx]), None
+        def scan_body(carry, idx):
+            tot, cnt = carry
+            nll, n = chunk_nll(xc[:, idx], lc[:, idx])
+            return (tot + nll, cnt + n), None
 
-        total, _ = jax.lax.scan(scan_body, jnp.zeros((), jnp.float32), jnp.arange(nchunk))
-        ntok = B * S
+        (total, ntok), _ = jax.lax.scan(
+            scan_body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(nchunk))
+        ntok = jnp.maximum(ntok, 1.0)
         loss = total / ntok
         if cfg.is_moe:
             loss = loss + 0.01 * aux / max(self.cfg.num_layers, 1)
@@ -290,7 +296,10 @@ class Model:
         monitor: Optional[detection.MonitorConfig] = None,
         microbatches: int = 1,
         accum_dtype: Optional[str] = None,   # None → f32; "bfloat16" for 100B+
+        monitor_metric: str = "loss",   # loss | update_norm | grad_norm
     ):
+        if monitor_metric not in ("loss", "update_norm", "grad_norm"):
+            raise ValueError(f"unknown monitor_metric {monitor_metric!r}")
         monitor = monitor or detection.MonitorConfig(
             mode=self.parallel.monitor_mode,
             eps=1e-2, eps_tilde=1e-2, ord=1.0,
@@ -332,9 +341,19 @@ class Model:
             grads = self.apply_grad_fixups(grads)
             updates, opt, gnorm = optimizer.update(grads, state.opt, state.params)
             params = apply_updates(state.params, updates)
-            # PFAIT: push the (already globally-reduced) loss through the
-            # K-stale ring; converged flag is read by the host asynchronously.
-            mon = detection.step(monitor, state.monitor, loss, axis_names=None)
+            # PFAIT: push the (already globally-reduced) convergence metric
+            # through the K-stale ring; converged flag is read by the host
+            # asynchronously.  update_norm is the fixed-point residual
+            # ‖x_{k+1} − x_k‖ (free by-product of the step, the paper's
+            # convention); grad_norm/loss are the classic ML criteria.
+            if monitor_metric == "update_norm":
+                contribution = global_norm(updates)
+            elif monitor_metric == "grad_norm":
+                contribution = gnorm
+            else:
+                contribution = loss
+            mon = detection.step(monitor, state.monitor, contribution,
+                                 axis_names=None)
             metrics = dict(metrics, loss=loss, grad_norm=gnorm,
                            converged=mon.converged)
             return TrainState(params=params, opt=opt, monitor=mon,

@@ -41,7 +41,9 @@ class AdamW:
             v=jax.tree.map(zeros, params),
         )
 
-    def update(self, grads, state: AdamState, params) -> Tuple[Any, AdamState]:
+    def update(
+        self, grads, state: AdamState, params
+    ) -> Tuple[Any, AdamState, jax.Array]:
         step = state.step + 1
         gnorm = global_norm(grads)
         scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))

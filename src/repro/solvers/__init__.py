@@ -1,6 +1,7 @@
 """Fixed-point solver substrate (the paper's experimental setting)."""
 from repro.solvers.convdiff import ConvDiffProblem, Stencil, make_rhs  # noqa: F401
 from repro.solvers.pagerank import PageRankProblem  # noqa: F401
+from repro.solvers.mlfixed import MLFixedPointProblem  # noqa: F401
 from repro.solvers.fixed_point import (  # noqa: F401
     SolveResult,
     SolverConfig,

@@ -1,0 +1,152 @@
+"""ML fixed-point problem family (async gradient descent): decomposition
+correctness, fused-path parity, batched-lane parity, and engine runs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.async_engine import AsyncEngine, stable_platform
+from repro.core.protocols import NFAIS2, NFAIS5, PFAIT, ExactSnapshotFIFO
+from repro.solvers.mlfixed import MLFixedPointProblem
+
+
+def _full_deps(prob, xs):
+    return [
+        {j: prob.interface(j, xs[j], i) for j in prob.neighbors(i)}
+        for i in range(prob.p)
+    ]
+
+
+@pytest.mark.parametrize("task", ["lstsq", "logistic"])
+def test_reference_solution_is_fixed_point(task):
+    prob = MLFixedPointProblem(n=32, p=4, m_rows=128, task=task, seed=0)
+    x = prob.solve_reference()
+    # minimiser ⇒ ∇F ≈ 0 ⇒ the update difference −γ∇F vanishes
+    assert np.max(np.abs(prob.grad(x))) < 1e-10
+    assert prob.exact_residual(prob.split(x)) < 1e-9
+    # strictly better objective than the planted model (noise/regularised)
+    assert prob.objective(x) <= prob.objective(prob.x_true) + 1e-12
+
+
+@pytest.mark.parametrize("task", ["lstsq", "logistic"])
+def test_synchronous_sweeps_contract(task):
+    prob = MLFixedPointProblem(n=32, p=4, m_rows=128, task=task, seed=1)
+    xs = [prob.init_local(i) for i in range(prob.p)]
+    r0 = prob.exact_residual(xs)
+    factor = 1.0 - prob.mu / prob.L   # GD contraction at γ = 1/L
+    for _ in range(5):
+        deps = _full_deps(prob, xs)
+        xs = [prob.update(i, xs[i], deps[i]) for i in range(prob.p)]
+    assert prob.exact_residual(xs) < r0 * factor ** 2  # loose: 5 sweeps
+
+
+@pytest.mark.parametrize("ordv", [1.0, 2.0, float("inf")])
+def test_update_with_residual_matches_pair(ordv):
+    prob = MLFixedPointProblem(n=16, p=4, m_rows=64, ord=ordv, seed=2)
+    rng = np.random.default_rng(3)
+    xs = [prob.init_local(i) + 0.1 * rng.standard_normal(prob.block)
+          for i in range(prob.p)]
+    deps = _full_deps(prob, xs)
+    for i in range(prob.p):
+        x_ref = prob.update(i, xs[i], deps[i])
+        r_ref = prob.local_residual(i, xs[i], deps[i])
+        x_new, r_i = prob.update_with_residual(i, xs[i], deps[i])
+        np.testing.assert_allclose(x_new, x_ref, atol=1e-15)
+        assert r_i == pytest.approx(r_ref, rel=1e-12)
+        x_skip, r_none = prob.update_with_residual(i, xs[i], deps[i],
+                                                   need_residual=False)
+        assert r_none is None
+        np.testing.assert_allclose(x_skip, x_ref, atol=1e-15)
+
+
+def test_dependency_graph_is_complete():
+    prob = MLFixedPointProblem(n=32, p=4, m_rows=128, seed=0)
+    for i in range(prob.p):
+        assert sorted(prob.neighbors(i)) == [j for j in range(prob.p)
+                                             if j != i]
+
+
+def test_validates_construction_params():
+    with pytest.raises(ValueError):
+        MLFixedPointProblem(n=10, p=4)
+    with pytest.raises(ValueError):
+        MLFixedPointProblem(n=16, p=4, task="svm")
+    with pytest.raises(ValueError):
+        MLFixedPointProblem(n=32, p=4, m_rows=16)
+    with pytest.raises(ValueError):
+        MLFixedPointProblem(n=16, p=4, m_rows=64, l2=-1.0)
+    with pytest.raises(ValueError):
+        MLFixedPointProblem(n=16, p=4, m_rows=64, cond=0.5)
+    prob = MLFixedPointProblem(n=16, p=4, m_rows=64)
+    with pytest.raises(ValueError):
+        MLFixedPointProblem(n=16, p=4, m_rows=64, gamma=3.0 / prob.L)
+
+
+@pytest.mark.parametrize("task", ["lstsq", "logistic"])
+@pytest.mark.parametrize("proto_name", ["pfait", "nfais2", "nfais5", "exact"])
+def test_all_protocols_terminate_on_mlfixed(proto_name, task):
+    prob = MLFixedPointProblem(n=16, p=4, m_rows=64, task=task, seed=0)
+    eps = 1e-8
+    proto = {
+        "pfait": lambda: PFAIT(eps, ord=prob.ord),
+        "nfais2": lambda: NFAIS2(eps, ord=prob.ord),
+        "nfais5": lambda: NFAIS5(eps, ord=prob.ord, m=4),
+        "exact": lambda: ExactSnapshotFIFO(eps, ord=prob.ord),
+    }[proto_name]()
+    cfg = dataclasses.replace(stable_platform(), seed=0, max_iters=20000,
+                              fifo=(proto_name == "exact"))
+    r = AsyncEngine(prob, cfg, proto).run()
+    assert r.terminated
+    assert r.r_star < 10 * eps
+    assert r.k_max > 0
+
+
+def test_engine_fused_matches_unfused_on_mlfixed():
+    res = {}
+    for fused in (False, True):
+        prob = MLFixedPointProblem(n=16, p=4, m_rows=64, seed=0)
+        cfg = dataclasses.replace(stable_platform(), seed=2, max_iters=20000,
+                                  fused=fused)
+        res[fused] = AsyncEngine(prob, cfg, PFAIT(1e-8, ord=prob.ord)).run()
+    assert res[True].terminated and res[False].terminated
+    assert res[True].r_star == pytest.approx(res[False].r_star, rel=1e-6)
+    assert res[True].k_max == res[False].k_max
+
+
+@pytest.mark.parametrize("task", ["lstsq", "logistic"])
+def test_batched_path_matches_sequential(task):
+    """One vmapped-lane step == the synchronous numpy sweep, for both the
+    single-lane default path and stacked per-seed operators."""
+    probs = [MLFixedPointProblem(n=16, p=4, m_rows=64, task=task, seed=s)
+             for s in (0, 1, 2)]
+    rng = np.random.default_rng(7)
+    X = rng.standard_normal((3, 16))
+
+    # reference: full synchronous sweep of each lane's own problem
+    refs, contribs = [], []
+    for prob, x in zip(probs, X):
+        xs = prob.split(x)
+        deps = _full_deps(prob, xs)
+        out = [prob.update_with_residual(i, xs[i], deps[i])
+               for i in range(prob.p)]
+        refs.append(prob.assemble([o[0] for o in out]))
+        contribs.append(sum(o[1] for o in out))
+
+    p0 = probs[0]
+    if task == "lstsq":
+        Y, C = p0.update_with_residual_batched(
+            X, H=np.stack([pr.H for pr in probs]),
+            c=np.stack([pr.c for pr in probs]),
+            gamma=np.array([pr.gamma for pr in probs]))
+    else:
+        Y, C = p0.update_with_residual_batched(
+            X, A=np.stack([pr.A for pr in probs]),
+            s=np.stack([pr.s for pr in probs]),
+            gamma=np.array([pr.gamma for pr in probs]))
+    np.testing.assert_allclose(np.asarray(Y), np.stack(refs), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(C), np.array(contribs), rtol=1e-10)
+
+    # single-lane default path evaluates this instance
+    Y0, C0 = p0.update_with_residual_batched(X[:1])
+    np.testing.assert_allclose(np.asarray(Y0)[0], refs[0], atol=1e-12)
+    assert float(np.asarray(C0)[0]) == pytest.approx(contribs[0], rel=1e-10)

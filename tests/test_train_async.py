@@ -1,0 +1,203 @@
+"""Async data-parallel training on real JAX shards: convergence across
+reduction modes, heterogeneous local SGD, and oracle-consistent detection.
+
+Multi-device behaviour follows the repo convention (test_shard_runtime.py):
+a forced-4-device subprocess, since the main test session pins 1 device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import detection
+from repro.core.termination import detection_consistent, oracle_detect_step
+from repro.runtime import train_async as ta
+from repro.solvers.mlfixed import MLFixedPointProblem
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _problem(task="lstsq", seed=3):
+    return MLFixedPointProblem(n=16, p=4, m_rows=64, task=task, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Host-side pieces (no mesh needed)
+# ---------------------------------------------------------------------------
+
+
+def test_effective_monitor_forces_k0_for_blocking_modes():
+    mon = detection.for_mode("pfait", eps_tilde=1e-6, staleness=3)
+    for red in ("blocking", "rdoubling"):
+        cfg = ta.TrainAsyncConfig(monitor=mon, reduction=red)
+        assert cfg.effective_monitor().staleness == 0
+    cfg = ta.TrainAsyncConfig(monitor=mon, reduction="nonblocking")
+    assert cfg.effective_monitor().staleness == 3
+
+
+def test_config_and_shape_validation():
+    prob = _problem()
+    mon = detection.for_mode("pfait", eps_tilde=1e-6)
+    with pytest.raises(ValueError):
+        ta.TrainAsyncConfig(monitor=mon, reduction="gossip")
+    with pytest.raises(ValueError):
+        ta.TrainAsyncConfig(monitor=mon, num_batches=0)
+    with pytest.raises(ValueError):
+        ta.safe_gamma(prob, 3)               # 64 rows % 3 != 0
+    with pytest.raises(ValueError):
+        ta.safe_gamma(prob, 4, num_batches=5)  # 16 local rows % 5 != 0
+
+
+def test_safe_gamma_tighter_than_full_batch():
+    """Minibatch curvature ≥ full-batch curvature per shard, so the safe
+    step shrinks (or stays) as batches get smaller."""
+    prob = _problem()
+    g1 = ta.safe_gamma(prob, 4, num_batches=1)
+    g4 = ta.safe_gamma(prob, 4, num_batches=4)
+    assert g4 <= g1 * (1 + 1e-12)
+    assert 0 < g4 < 2.0 / prob.mu
+
+
+def test_reference_trace_converges_and_oracle_scores_it():
+    """The host reference of the lifted map: residual decreasing to 0 for
+    deterministic rotation (s multiple of num_batches), and the oracle
+    helpers agree on the crossing."""
+    prob = _problem()
+    gamma = ta.safe_gamma(prob, 4, num_batches=2)
+    X, ref = ta.reference_trace(prob, 4, inner_steps=2, num_batches=2,
+                                gamma=gamma, rounds=3000)
+    eps = 1e-6
+    k = oracle_detect_step(ref, eps)
+    assert k is not None and 0 < k < 3000
+    assert ref[k] < eps <= ref[k - 1]
+    assert detection_consistent(k, ref, eps)
+    assert not detection_consistent(None, ref, eps)
+    assert oracle_detect_step(ref, 1e-300) is None
+    # endpoint matches exact_train_residual on the final stack
+    endpoint = ta.exact_train_residual(prob, X, 2, gamma, num_batches=2,
+                                       phase=3000)
+    assert endpoint == pytest.approx(ref[-1], rel=1e-2)
+
+
+def test_heterogeneous_inner_steps_bias_stays_below_plateau():
+    """Workers doing different step counts converge to a lifted fixed
+    point whose replicas differ (local-SGD objective inconsistency), yet
+    the residual still → 0 — the certificate is about the *map*, not
+    about replica agreement."""
+    prob = _problem()
+    gamma = ta.safe_gamma(prob, 4, num_batches=1)
+    X, ref = ta.reference_trace(prob, 4, inner_steps=[1, 2, 1, 3],
+                                num_batches=1, gamma=gamma, rounds=4000)
+    assert ref[-1] < 1e-10
+    spread = np.max(np.abs(X - X.mean(axis=0)))
+    assert spread > 1e-8      # replicas genuinely offset at the fixed point
+    x_star = prob.solve_reference()
+    # the consensus mean sits near (not at) the minimiser: O(γ) bias
+    assert np.linalg.norm(X.mean(axis=0) - x_star) < 10 * gamma
+
+
+# ---------------------------------------------------------------------------
+# Multi-device behaviour (forced 4-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+_SUBPROCESS_PROGRAM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro.core import detection
+    from repro.core.termination import detection_consistent, oracle_detect_step
+    from repro.launch.mesh import make_shard_mesh
+    from repro.runtime import train_async as ta
+    from repro.solvers.mlfixed import MLFixedPointProblem
+
+    mesh = make_shard_mesh(4)
+    eps_tilde = 1e-6
+    nb = 2
+
+    # 1. every reduction mode converges on both tasks; the exact lifted
+    #    residual (the synchronized eval the run never paid) certifies ε̃
+    for task in ("lstsq", "logistic"):
+        prob = MLFixedPointProblem(n=16, p=4, m_rows=64, task=task, seed=3)
+        gamma = ta.safe_gamma(prob, 4, num_batches=nb)
+        for red in ("blocking", "nonblocking", "rdoubling"):
+            hetero = red != "blocking"
+            cfg = ta.TrainAsyncConfig(
+                monitor=detection.for_mode("pfait", eps_tilde=eps_tilde,
+                                           staleness=2),
+                reduction=red,
+                inner_steps=[2, 4, 2, 4] if hetero else 2,
+                view_delay=[0, 1, 2, 1] if hetero else 0,
+                contrib_lag=[0, 1, 0, 2] if hetero else 0,
+                num_batches=nb, gamma=gamma, max_rounds=20000)
+            r = ta.make_train_runtime(prob, cfg, mesh)(
+                ta.init_replicas(prob, 4), prob.A, prob.y)
+            assert bool(r.converged), (task, red)
+            exact = ta.exact_train_residual(prob, np.asarray(r.x),
+                                            cfg.inner_steps, gamma,
+                                            num_batches=nb)
+            assert exact < 10 * eps_tilde, (task, red, exact)
+            steps = np.asarray(r.local_steps)
+            if hetero:
+                assert steps.max() == 2 * steps.min(), (task, red)
+            assert float(r.residual) < eps_tilde / 10 * 1.01, (task, red)
+
+    # 2. zero-delay nonblocking trace == host reference, round for round
+    prob = MLFixedPointProblem(n=16, p=4, m_rows=64, task="lstsq", seed=3)
+    gamma = ta.safe_gamma(prob, 4, num_batches=nb)
+    cfg = ta.TrainAsyncConfig(
+        monitor=detection.for_mode("sync", eps_tilde=1e-8),
+        reduction="nonblocking", inner_steps=2, num_batches=nb,
+        gamma=gamma, max_rounds=5000, trace_len=32)
+    r = ta.make_train_runtime(prob, cfg, mesh)(
+        ta.init_replicas(prob, 4), prob.A, prob.y)
+    _, ref = ta.reference_trace(prob, 4, 2, nb, gamma, rounds=32)
+    np.testing.assert_allclose(np.asarray(r.trace)[:30], ref[:30],
+                               rtol=1e-5)   # f32 trace storage
+
+    # 3. the async detection round is decade-consistent with the
+    #    synchronized-eval oracle
+    cfg = ta.TrainAsyncConfig(
+        monitor=detection.for_mode("pfait", eps_tilde=eps_tilde, staleness=2),
+        reduction="nonblocking", inner_steps=2, num_batches=nb,
+        gamma=gamma, max_rounds=20000)
+    r = ta.make_train_runtime(prob, cfg, mesh)(
+        ta.init_replicas(prob, 4), prob.A, prob.y)
+    assert bool(r.converged)
+    detected = int(r.rounds)
+    _, ref = ta.reference_trace(prob, 4, 2, nb, gamma, rounds=detected + 16)
+    oracle = oracle_detect_step(ref, eps_tilde)
+    assert oracle is not None and detected >= oracle, (detected, oracle)
+    assert detection_consistent(detected, ref, eps_tilde)
+
+    # 4. NFAIS2 pays its blocking verification and certifies ε̃ itself
+    cfg = ta.TrainAsyncConfig(
+        monitor=detection.for_mode("nfais2", eps_tilde=eps_tilde,
+                                   staleness=2, persistence=3),
+        reduction="nonblocking", inner_steps=2, view_delay=[0, 1, 0, 1],
+        num_batches=nb, gamma=gamma, max_rounds=20000)
+    r = ta.make_train_runtime(prob, cfg, mesh)(
+        ta.init_replicas(prob, 4), prob.A, prob.y)
+    assert bool(r.converged)
+    assert int(r.verifications) >= 1
+    assert float(r.residual) < eps_tilde
+    print("TRAIN_ASYNC_OK")
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_train_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_PROGRAM], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "TRAIN_ASYNC_OK" in out.stdout
