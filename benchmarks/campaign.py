@@ -59,6 +59,7 @@ FINGERPRINT_PATHS: Tuple[str, ...] = (
     "benchmarks/bench_shard_runtime.py",
     "benchmarks/bench_elastic.py",
     "benchmarks/bench_ml.py",
+    "benchmarks/bench_replay.py",
 )
 
 

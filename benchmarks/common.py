@@ -469,6 +469,38 @@ def _cell_elastic_device(**kw) -> Dict:
     return elastic_device(**kw)
 
 
+# -- replay cells (benchmarks/bench_replay.py) -------------------------------
+
+
+@cell_kind("replay_measured", cache=False)  # timing cell: always re-measured
+def _cell_replay_measured(**kw) -> Dict:
+    """Measure one shard-runtime config (needs a multi-device platform),
+    record its schema trace, self-replay it, and score prediction error
+    (wall ±20%, detection step exact)."""
+    from benchmarks.bench_replay import replay_measured
+
+    return replay_measured(**kw)
+
+
+@cell_kind("replay_whatif", env=("numpy",))
+def _cell_replay_whatif(**kw) -> Dict:
+    """Deterministic what-if extrapolation row: replay a synthetic
+    canonical trace at a large shard count / alternate topology (pure
+    numpy — cacheable and exact-gateable)."""
+    from benchmarks.bench_replay import replay_whatif
+
+    return replay_whatif(**kw)
+
+
+@cell_kind("replay_calibrate", cache=False)  # measures live durations
+def _cell_replay_calibrate(**kw) -> Dict:
+    """Fit an event-sim DelayModel from repeated measured executions of a
+    short fixed-iteration shard program, with a goodness-of-fit report."""
+    from benchmarks.bench_replay import replay_calibrate
+
+    return replay_calibrate(**kw)
+
+
 # -- ML-workload cells (benchmarks/bench_ml.py) ------------------------------
 
 

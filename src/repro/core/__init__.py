@@ -8,6 +8,10 @@
 * ``termination``   — ε-threshold calibration methodology (paper §4.2)
 * ``scenarios``     — composable adversarial platform effects (reliability lab)
 * ``reliability``   — replay traces + false/late-detection oracle
+* ``reduction``     — registry of on-device reduction modes (topology facts)
+* ``trace``         — common structured event-trace schema (JSONL)
 """
 from repro.core import residual, termination  # noqa: F401
 from repro.core.detection import MonitorConfig, MonitorState, for_mode, init_state  # noqa: F401
+from repro.core.reduction import REDUCTIONS, ReductionMode, get_reduction  # noqa: F401
+from repro.core.trace import Trace, EngineTraceObserver  # noqa: F401

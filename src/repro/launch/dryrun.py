@@ -162,19 +162,26 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
 
 
 def lower_solver_cell(multi_pod: bool, n: int = 1024, mode: str = "pfait") -> Dict[str, Any]:
-    """The paper's own workload: distributed convdiff solve (f32, TPU-real)."""
+    """The paper's own workload: the device-resident shard runtime's
+    convdiff solve, lowered at production shard counts through the unified
+    ``runtime.api.RuntimeConfig`` (the same build path ``api.run_shard``
+    executes — the dry-run sees the program that actually runs)."""
+    from repro.launch.mesh import make_shard_mesh
+    from repro.runtime.api import RuntimeConfig
+    from repro.runtime.shard_runtime import make_runtime, state_spec
     from repro.solvers.convdiff import Stencil
-    from repro.solvers.fixed_point import SolverConfig, make_sharded_solver
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    ax_x = ("pod", "data") if multi_pod else "data"
+    p = 512 if multi_pod else 256    # matches the 2x16x16 / 16x16 pods
+    mesh = make_shard_mesh(p)
     st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.95)
     mon = detection.for_mode(mode, eps_tilde=1e-4, margin=10.0, staleness=4)
-    cfg = SolverConfig(stencil=st, monitor=mon, inner_sweeps=4, max_outer=20_000)
-    solve = make_sharded_solver(cfg, mesh, ax_x=ax_x, ax_y="model")
-    spec = P(ax_x, "model", None)
-    x0 = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, spec))
-    b = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, spec))
+    rcfg = RuntimeConfig(monitor=mon, reduction="nonblocking",
+                         inner_sweeps=4, max_outer=20_000)
+    solve = make_runtime("convdiff", rcfg.to_shard_config(), mesh, n, stencil=st)
+    xspec = state_spec("convdiff", "shard")
+    aspec = P("shard", None, None)
+    x0 = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, xspec))
+    b = jax.ShapeDtypeStruct((n, n, n), jnp.float32, sharding=NamedSharding(mesh, aspec))
     t0 = time.time()
     lowered = jax.jit(solve).lower(x0, b)
     t_lower = time.time() - t0
@@ -183,6 +190,8 @@ def lower_solver_cell(multi_pod: bool, n: int = 1024, mode: str = "pfait") -> Di
     t_compile = time.time() - t0
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # some jax versions wrap in a list
+        ca = ca[0] if ca else {}
     pstats = hlo_analysis.program_stats(
         compiled.as_text(), default_group=int(np.prod(list(mesh.shape.values())))
     )
@@ -196,6 +205,7 @@ def lower_solver_cell(multi_pod: bool, n: int = 1024, mode: str = "pfait") -> Di
         "solver_max_outer": 20_000,  # loop-aware stats cover the full solve
         "shape": "solver",
         "mesh": "2x16x16" if multi_pod else "16x16",
+        "shards": p,
         "kind": "solver",
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),

@@ -6,6 +6,11 @@ flags, evaluated K steps stale (non-blocking) — the decode loop never
 fences on the termination check; at detection it rolls back nothing
 (generated tokens past EOS are masked), trading ≤K wasted steps for an
 un-fenced steady-state loop, exactly the PFAIT trade.
+
+The stale predicate runs through ``core.detection``'s monitor (PFAIT
+lane, ε = 0.5 on the indicator g = 1 − [all finished], ring depth K)
+rather than a hand-rolled flag ring, so serving exercises the same
+detection code path as the solvers and the trace/replay subsystem.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ import numpy as np
 
 from repro.configs.base import reduced as reduced_cfg
 from repro.configs.registry import get_arch
+from repro.core import detection
 from repro.models import Model
 
 
@@ -71,8 +77,12 @@ def serve(
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # [B]
     finished = jnp.zeros((batch,), bool)
     generated = [tok]
-    # K-stale termination ring (PFAIT): predicate uses the flag from K ago
-    ring = [jnp.zeros((), bool)] * (staleness + 1)
+    # K-stale termination (PFAIT monitor): g = 1 − [all finished] ∈ {0, 1},
+    # ε = 0.5, so the monitor fires when the flag launched K steps ago was
+    # set — the loop never fences on the fresh flag
+    mon = detection.MonitorConfig(mode="pfait", eps=0.5,
+                                  staleness=staleness, ord=float("inf"))
+    mstate = detection.init_state(mon)
     steps_done = 0
     for i in range(max_new - 1):
         inp = tok[:, None]
@@ -82,9 +92,10 @@ def serve(
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         finished = finished | (tok == eos_id)
         generated.append(tok)
-        ring.append(jnp.all(finished))
+        g = 1.0 - jnp.all(finished).astype(jnp.float32)
+        mstate = detection.step(mon, mstate, g)
         steps_done = i + 1
-        if bool(ring.pop(0)):   # stale view — never fences the fresh flag
+        if bool(detection.should_stop(mstate)):   # stale view only
             break
     toks = jnp.stack(generated, axis=1)
     wall = time.time() - t0

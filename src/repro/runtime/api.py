@@ -1,0 +1,293 @@
+"""Unified runtime API — one config, one report, three runtimes.
+
+The three device runtimes grew three drifted entrypoints: the shard solver
+returns a ``ShardRunResult`` NamedTuple from a ``ShardRuntimeConfig``, the
+training loop a ``TrainRunResult`` from a ``TrainAsyncConfig`` (same knobs,
+renamed fields), and the elastic driver an ``ElasticReport`` from a pile of
+keyword arguments.  This module is the common contract on top:
+
+* ``RuntimeConfig``  — one frozen config carrying the union of the
+  asynchrony knobs, validated once (reduction through the
+  ``core.reduction`` registry) and converted to the per-runtime configs by
+  ``to_shard_config()`` / ``to_train_config()``.
+* ``RunReport``      — one result dataclass every entrypoint returns:
+  residual history, detection step, wall segments, schema trace handle
+  (``core.trace``), membership log, solution, and the raw per-runtime
+  result for anything not lifted.
+* ``run_shard`` / ``run_train`` / ``run_elastic`` — the entrypoints.
+  Trace recording attaches here (``record_trace=True``), not through
+  per-runtime kwargs.
+
+The historical entrypoints (``shard_runtime.make_runtime``,
+``train_async.make_train_runtime``, ``elastic.run_elastic``) remain as thin
+deprecation shims with unchanged signatures and return types — this module
+routes through them, and ``tests/test_runtime_api.py`` proves the results
+bitwise-match.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import detection
+from repro.core.reduction import get_reduction
+from repro.core.trace import (
+    Trace,
+    trace_from_elastic_report,
+    trace_from_shard_run,
+    trace_from_train_run,
+)
+
+#: trace_len used when ``record_trace=True`` and the user left trace_len=0
+DEFAULT_TRACE_LEN = 512
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """The union of the three runtimes' asynchrony knobs.
+
+    Per-shard fields (``inner_sweeps``/``halo_delay``/``contrib_lag``)
+    accept a scalar or a length-p sequence exactly like the per-runtime
+    configs.  Fields a runtime does not use are ignored by its converter
+    (``num_batches``/``gamma`` are training-only; ``sweep`` is
+    convdiff-only).
+    """
+
+    monitor: detection.MonitorConfig
+    reduction: str = "nonblocking"
+    inner_sweeps: Union[int, Sequence[int]] = 1
+    halo_delay: Union[int, Sequence[int]] = 0
+    contrib_lag: Union[int, Sequence[int]] = 0
+    max_outer: int = 10_000
+    trace_len: int = 0
+    axis: str = "shard"
+    sweep: str = "jacobi"            # convdiff only
+    num_batches: int = 1             # training only
+    gamma: Optional[float] = None    # training only (None → safe_gamma)
+    record_trace: bool = False       # attach a schema Trace to the report
+
+    def __post_init__(self):
+        get_reduction(self.reduction)  # registry validation at construction
+        if self.max_outer < 1:
+            raise ValueError(f"max_outer={self.max_outer} must be >= 1")
+
+    def _trace_len(self) -> int:
+        if self.record_trace and not self.trace_len:
+            return min(DEFAULT_TRACE_LEN, self.max_outer)
+        return int(self.trace_len)
+
+    def to_shard_config(self):
+        """The equivalent ``ShardRuntimeConfig``."""
+        from repro.runtime.shard_runtime import ShardRuntimeConfig
+
+        return ShardRuntimeConfig(
+            monitor=self.monitor, reduction=self.reduction,
+            inner_sweeps=self.inner_sweeps, halo_delay=self.halo_delay,
+            contrib_lag=self.contrib_lag, max_outer=self.max_outer,
+            trace_len=self._trace_len(), sweep=self.sweep, axis=self.axis)
+
+    def to_train_config(self):
+        """The equivalent ``TrainAsyncConfig`` (inner_sweeps→inner_steps,
+        halo_delay→view_delay, max_outer→max_rounds)."""
+        from repro.runtime.train_async import TrainAsyncConfig
+
+        return TrainAsyncConfig(
+            monitor=self.monitor, reduction=self.reduction,
+            inner_steps=self.inner_sweeps, view_delay=self.halo_delay,
+            contrib_lag=self.contrib_lag, num_batches=self.num_batches,
+            gamma=self.gamma, max_rounds=self.max_outer,
+            trace_len=self._trace_len(), axis=self.axis)
+
+
+@dataclass
+class RunReport:
+    """What every unified entrypoint returns."""
+
+    converged: bool
+    detected_residual: Optional[float]
+    detect_step: Optional[int]           # outer step the claim fired at
+    outer_iters: int
+    residual_history: np.ndarray         # launched residuals (finite prefix)
+    wall_segments: List[Tuple[str, float]]   # [(name, seconds)]
+    trace: Optional[Trace]               # schema trace (record_trace=True)
+    membership_log: List[Tuple[int, str, str]]   # (segment, kind, detail)
+    x: Any                               # final solution (runtime's layout)
+    raw: Any = field(repr=False, default=None)   # the per-runtime result
+
+    @property
+    def wall_s(self) -> float:
+        return float(sum(s for _, s in self.wall_segments))
+
+
+def _history(trace_arr, outer: int, tlen: int) -> np.ndarray:
+    arr = np.asarray(trace_arr, dtype=np.float64)[:min(outer, max(tlen, 1))]
+    return arr[np.isfinite(arr)]
+
+
+def _detect_step(converged: bool, outer: int) -> Optional[int]:
+    return outer - 1 if converged and outer > 0 else None
+
+
+# ---------------------------------------------------------------------------
+# Entrypoints
+# ---------------------------------------------------------------------------
+
+
+def run_shard(family: str, cfg: RuntimeConfig, mesh, n: int, x0, arg, *,
+              stencil=None, damping: float = 0.85,
+              timing_runs: int = 0) -> RunReport:
+    """Build, place, and run the asynchronous shard solver; one call.
+
+    ``x0``/``arg`` may be host arrays — they are placed with the family's
+    sharding on ``mesh``.  Wall segments: ``build`` (jit + placement,
+    includes compile), ``run`` (a second, compiled execution — the
+    steady-state cost replay calibrates against), and ``timing_runs``
+    further ``rerun`` executions of the same compiled program (benchmarks
+    separate calibration runs from scoring runs without recompiling).
+    """
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.runtime.shard_runtime import make_runtime, state_spec
+
+    scfg = cfg.to_shard_config()
+    axis = cfg.axis
+    p = mesh.shape[axis]
+    xspec = state_spec(family, axis)
+    aspec = _shard_arg_spec(family, axis)
+    t0 = time.perf_counter()
+    run = jax.jit(make_runtime(family, scfg, mesh, n,
+                               stencil=stencil, damping=damping))
+    x_dev = jax.device_put(np.asarray(x0), NamedSharding(mesh, xspec))
+    a_dev = jax.device_put(np.asarray(arg), NamedSharding(mesh, aspec))
+    jax.block_until_ready(run(x_dev, a_dev))   # compile + first execution
+    t1 = time.perf_counter()
+    result = jax.block_until_ready(run(x_dev, a_dev))
+    t2 = time.perf_counter()
+    segments = [("build", t1 - t0), ("run", t2 - t1)]
+    segments += _timed_reruns(run, (x_dev, a_dev), timing_runs)
+    return _shard_report(result, scfg, p, segments, source="shard")
+
+
+def run_train(problem, cfg: RuntimeConfig, mesh, X0, A, y,
+              timing_runs: int = 0) -> RunReport:
+    """Unified entrypoint of the asynchronous data-parallel training loop."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.runtime.train_async import make_train_runtime
+
+    tcfg = cfg.to_train_config()
+    axis = cfg.axis
+    p = mesh.shape[axis]
+    row = P(axis, None)
+    t0 = time.perf_counter()
+    run = jax.jit(make_train_runtime(problem, tcfg, mesh))
+    X_dev = jax.device_put(np.asarray(X0), NamedSharding(mesh, row))
+    A_dev = jax.device_put(np.asarray(A), NamedSharding(mesh, row))
+    y_dev = jax.device_put(np.asarray(y), NamedSharding(mesh, P(axis)))
+    jax.block_until_ready(run(X_dev, A_dev, y_dev))
+    t1 = time.perf_counter()
+    result = jax.block_until_ready(run(X_dev, A_dev, y_dev))
+    t2 = time.perf_counter()
+    segments = [("build", t1 - t0), ("run", t2 - t1)]
+    segments += _timed_reruns(run, (X_dev, A_dev, y_dev), timing_runs)
+    return _shard_report(result, tcfg, p, segments, source="train")
+
+
+def _timed_reruns(run, args, timing_runs: int) -> List[Tuple[str, float]]:
+    import jax
+
+    out = []
+    for _ in range(max(int(timing_runs), 0)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(*args))
+        out.append(("rerun", time.perf_counter() - t0))
+    return out
+
+
+def run_elastic(family: str, cfg: RuntimeConfig, n: int, x0, arg, plan,
+                ckpt_dir: str, **knobs) -> RunReport:
+    """Unified entrypoint of the elastic fault-injected driver.
+
+    ``knobs`` pass through to ``elastic.run_elastic`` (``p0``,
+    ``segment_len``, ``ckpt_every``, ``heartbeat_timeout``,
+    ``max_segments``, ``straggler_policy``, ``keep``, ``stencil``,
+    ``damping``).  ``cfg.max_outer`` is owned by the driver's segmentation,
+    as before.
+    """
+    from repro.runtime import elastic as _elastic
+
+    scfg = cfg.to_shard_config()
+    t0 = time.perf_counter()
+    report = _elastic.run_elastic(family, scfg, n, x0, arg, plan, ckpt_dir,
+                                  **knobs)
+    t1 = time.perf_counter()
+    p0 = report.mesh_history[0][1] if report.mesh_history else 1
+    tr = None
+    if cfg.record_trace:
+        tr = trace_from_elastic_report(report, scfg, p0)
+        tr.validate()
+    return RunReport(
+        converged=bool(report.converged),
+        detected_residual=report.detected_residual,
+        detect_step=(report.outer_iters - 1 if report.converged else None),
+        outer_iters=int(report.outer_iters),
+        residual_history=np.asarray(
+            [] if report.detected_residual is None
+            else [report.detected_residual], dtype=np.float64),
+        wall_segments=[("elastic", t1 - t0)],
+        trace=tr,
+        membership_log=list(report.events),
+        x=report.x,
+        raw=report,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Internals
+# ---------------------------------------------------------------------------
+
+
+def _shard_arg_spec(family: str, axis: str):
+    from jax.sharding import PartitionSpec as P
+
+    if family == "convdiff":
+        return P(axis, None, None)
+    if family == "pagerank":
+        return P(axis, None)
+    from repro.runtime.shard_runtime import FAMILIES
+
+    raise KeyError(f"family {family!r} not in {FAMILIES}")
+
+
+def _shard_report(result, rcfg, p: int, segments, source: str) -> RunReport:
+    outer = int(getattr(result, "outer_iters", getattr(result, "rounds", 0)))
+    converged = bool(result.converged)
+    # the trace's wall is the steady-state execution, not the compile: cost
+    # calibration must see the cost a long run actually pays per step
+    named = dict(segments)
+    wall = float(named.get("run", sum(s for _, s in segments)))
+    record = rcfg.trace_len > 0
+    tr = None
+    if record:
+        if source == "train":
+            tr = trace_from_train_run(result, rcfg, p, wall)
+        else:
+            tr = trace_from_shard_run(result, rcfg, p, wall)
+        tr.validate()
+    return RunReport(
+        converged=converged,
+        detected_residual=float(result.residual) if converged else None,
+        detect_step=_detect_step(converged, outer),
+        outer_iters=outer,
+        residual_history=_history(result.trace, outer, rcfg.trace_len),
+        wall_segments=list(segments),
+        trace=tr,
+        membership_log=[],
+        x=result.x,
+        raw=result,
+    )

@@ -92,16 +92,19 @@ def reshard(tree: Any, specs: Any, mesh: Mesh) -> Any:
 
 def shrink_to_fit(n: int, survivors: int, reduction: str = "nonblocking") -> int:
     """Largest shard count ≤ ``survivors`` the runtime can actually use:
-    it must divide the block dimension ``n``, and the recursive-doubling
-    reduction additionally needs a power-of-two butterfly (the event-level
-    protocol folds remainders; the device twin keeps the classic
-    geometry)."""
+    it must divide the block dimension ``n``, and the reduction mode's
+    topology facts (``core.reduction``) must admit it — recursive doubling
+    needs a power-of-two butterfly (the event-level protocol folds
+    remainders; the device twin keeps the classic geometry)."""
+    from repro.core.reduction import get_reduction
+
+    mode = get_reduction(reduction)   # validates the name too
     if survivors < 1:
         raise ValueError("no survivors to fit a mesh to")
     for p in range(min(int(survivors), int(n)), 0, -1):
         if n % p:
             continue
-        if reduction == "rdoubling" and p & (p - 1):
+        if not mode.usable_shard_count(p):
             continue
         return p
     raise ValueError(f"no usable shard count for n={n}, "
@@ -185,7 +188,14 @@ def run_elastic(
     keep: int = 3,
 ) -> ElasticReport:
     """Run the asynchronous shard runtime to convergence through the fault
-    plan.  See the module docstring for the control-loop semantics; notable
+    plan.
+
+    .. deprecated:: Prefer ``repro.runtime.api.run_elastic`` (unified
+       ``RuntimeConfig``/``RunReport`` surface, schema-trace attachment).
+       This driver remains the compatibility shim the unified API routes
+       through — signature and ``ElasticReport`` return type are frozen.
+
+    See the module docstring for the control-loop semantics; notable
     contracts:
 
     * per-shard config fields must be scalars (the shard count changes

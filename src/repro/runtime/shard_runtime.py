@@ -56,6 +56,7 @@ import numpy as np
 from repro.core import detection
 from repro.core import residual as res
 from repro.core.compat import shard_map_compat as _shard_map
+from repro.core.reduction import REDUCTIONS, get_reduction
 from repro.kernels.residual_norm import ops as rn_ops
 from repro.solvers import gauss_seidel, jacobi
 from repro.solvers.convdiff import Stencil
@@ -63,7 +64,9 @@ from repro.solvers.fixed_point import _shift, ghosted
 
 P = jax.sharding.PartitionSpec
 
-REDUCTIONS = ("blocking", "nonblocking", "rdoubling")
+# REDUCTIONS is re-exported above from repro.core.reduction — the registry is
+# the single source of truth; historical importers of
+# ``shard_runtime.REDUCTIONS`` keep working.
 
 
 def _per_shard(v: Union[int, Sequence[int]], p: int, name: str) -> np.ndarray:
@@ -92,8 +95,7 @@ class ShardRuntimeConfig:
     axis: str = "shard"
 
     def __post_init__(self):
-        if self.reduction not in REDUCTIONS:
-            raise ValueError(f"reduction {self.reduction!r} not in {REDUCTIONS}")
+        get_reduction(self.reduction)  # registry validation at construction
         if self.sweep not in ("jacobi", "hybrid"):
             raise ValueError(f"sweep {self.sweep!r} not in ('jacobi', 'hybrid')")
 
@@ -102,7 +104,8 @@ class ShardRuntimeConfig:
         immediately and recursive doubling carries its own log2(p)-step
         pipeline, so both force the monitor's K to 0; non-blocking keeps the
         configured staleness (the in-flight window)."""
-        if self.reduction in ("blocking", "rdoubling") and self.monitor.staleness:
+        if get_reduction(self.reduction).forces_zero_staleness \
+                and self.monitor.staleness:
             return dataclasses.replace(self.monitor, staleness=0)
         return self.monitor
 
@@ -431,6 +434,11 @@ FAMILIES = ("convdiff", "pagerank")
 def make_runtime(family: str, cfg: ShardRuntimeConfig, mesh, n: int, *,
                  stencil: Optional[Stencil] = None, damping: float = 0.85):
     """``run(x0, problem_arg) -> ShardRunResult`` for a problem family.
+
+    .. deprecated:: Prefer ``repro.runtime.api.run_shard`` (unified
+       ``RuntimeConfig``/``RunReport`` surface).  This builder remains the
+       compatibility shim the unified API routes through — signature and
+       return type are frozen.
 
     One entry point for every caller that must rebuild the runtime against
     a *changing* mesh (the elastic driver re-invokes it after each

@@ -50,8 +50,8 @@ import numpy as np
 from repro.core import detection
 from repro.core import residual as res
 from repro.core.compat import shard_map_compat as _shard_map
+from repro.core.reduction import get_reduction
 from repro.runtime.shard_runtime import (
-    REDUCTIONS,
     _butterfly_rounds,
     _butterfly_step,
     _per_shard,
@@ -82,9 +82,7 @@ class TrainAsyncConfig:
     axis: str = "shard"
 
     def __post_init__(self):
-        if self.reduction not in REDUCTIONS:
-            raise ValueError(
-                f"reduction {self.reduction!r} not in {REDUCTIONS}")
+        get_reduction(self.reduction)  # registry validation at construction
         if self.num_batches < 1:
             raise ValueError(f"num_batches={self.num_batches} must be >= 1")
 
@@ -92,7 +90,7 @@ class TrainAsyncConfig:
         """Same convention as the shard runtime: blocking consumes its
         reduction immediately and recursive doubling pipelines internally,
         so both force the monitor's K to 0."""
-        if self.reduction in ("blocking", "rdoubling") \
+        if get_reduction(self.reduction).forces_zero_staleness \
                 and self.monitor.staleness:
             return dataclasses.replace(self.monitor, staleness=0)
         return self.monitor
@@ -153,6 +151,11 @@ def safe_gamma(problem: MLFixedPointProblem, p: int,
 def make_train_runtime(problem: MLFixedPointProblem, cfg: TrainAsyncConfig,
                        mesh):
     """Build ``run(X0, A, y) -> TrainRunResult`` over a 1-D shard mesh.
+
+    .. deprecated:: Prefer ``repro.runtime.api.run_train`` (unified
+       ``RuntimeConfig``/``RunReport`` surface).  This builder remains the
+       compatibility shim the unified API routes through — signature and
+       return type are frozen.
 
     ``X0`` — [p, n] replica stack sharded ``P(axis, None)``; ``A`` — the
     [m, n] design row-sharded ``P(axis, None)``; ``y`` — [m] targets

@@ -1,0 +1,339 @@
+"""Replay + calibration tests: monitor-replay parity with the device
+monitor, self-replay exactness on a recorded device run, virtual-clock
+structure (topology ordering, stragglers), cost/delay-model fitting, and
+the ReductionMode registry edges.
+
+All in-process on the session's single device (tests/conftest.py); the
+multi-shard replay accuracy claims run in the gated ``replay-smoke`` CI
+lane (benchmarks/bench_replay.py).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import detection
+from repro.core.reduction import REDUCTIONS, get_reduction
+from repro.core.trace import Trace
+from repro.sim.calibrate import (
+    DEFAULT_HOP_FRACTION,
+    fit_cost_model,
+    fit_delay_model,
+    ks_statistic,
+)
+from repro.sim.replay import (
+    TOPOLOGIES,
+    CostModel,
+    WhatIf,
+    predict_wall,
+    replay,
+    replay_monitor,
+    visible_series,
+    what_if_table,
+)
+
+
+def _synthetic_trace(p=8, rho=0.9, steps=120, eps=1e-4, staleness=2,
+                     mode="pfait", reduction="nonblocking",
+                     topology="flat", wall_s=1.0):
+    tr = Trace("synthetic", p, {
+        "reduction": reduction, "topology": topology,
+        "monitor": {"mode": mode, "eps": eps, "eps_tilde": eps,
+                    "staleness": staleness, "persistence": 4, "ord": 2.0,
+                    "check_every": 1},
+        "inner_sweeps": [1] * p, "halo_delay": [0] * p,
+        "contrib_lag": [0] * p, "wall_s": wall_s, "outer_iters": steps,
+        "synthetic_t": True,
+    })
+    for k in range(steps):
+        tr.add("reduce", float(k + 1), step=k, residual=rho ** k)
+    return tr
+
+
+_COST = CostModel(sweep_s=1e-3, hop_s=5e-5, residual_pass_s=1e-3, p_ref=8)
+
+
+# ---------------------------------------------------------------------------
+# ReductionMode registry edges
+# ---------------------------------------------------------------------------
+
+
+def test_get_reduction_rejects_unknown_name():
+    with pytest.raises(ValueError, match="reduction"):
+        get_reduction("gossip")
+
+
+def test_registry_topology_facts():
+    assert set(REDUCTIONS) == {"blocking", "nonblocking", "rdoubling"}
+    rd = get_reduction("rdoubling")
+    assert rd.requires_power_of_two and rd.topology == "butterfly"
+    assert rd.rounds_per_value(8) == 3
+    with pytest.raises(ValueError, match="power-of-two"):
+        rd.rounds_per_value(6)
+    assert rd.usable_shard_count(4) and not rd.usable_shard_count(6)
+    nb = get_reduction("nonblocking")
+    assert nb.rounds_per_value(8) == 1 and nb.usable_shard_count(6)
+    assert get_reduction("blocking").forces_zero_staleness
+
+
+def test_shrink_to_fit_respects_power_of_two():
+    from repro.runtime.elastic import shrink_to_fit
+
+    # n=16: divisors 1,2,4,8,16.  rdoubling cannot use 6 or 3 survivors
+    # beyond the largest power-of-two divisor below them.
+    assert shrink_to_fit(16, 6, "nonblocking") == 4   # 6,5 don't divide 16
+    assert shrink_to_fit(16, 6, "rdoubling") == 4
+    assert shrink_to_fit(12, 6, "nonblocking") == 6
+    assert shrink_to_fit(12, 6, "rdoubling") == 4     # 6 is not a power of 2
+    with pytest.raises(ValueError, match="reduction"):
+        shrink_to_fit(16, 4, "gossip")
+
+
+# ---------------------------------------------------------------------------
+# Monitor replay: parity with core.detection on the same series
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["pfait", "nfais5", "sync"])
+@pytest.mark.parametrize("staleness", [0, 2])
+def test_replay_monitor_matches_batched_monitor(mode, staleness):
+    """The numpy mirror must land on the device monitor's exact step."""
+    if mode == "sync":
+        staleness = 0
+    rng = np.random.default_rng(7)
+    # contraction with noise: crosses eps, wobbles, then stays below
+    series = 0.9 ** np.arange(160) * np.exp(0.3 * rng.standard_normal(160))
+    eps = 1e-4
+    # batched_monitor applies sigma to contributions: feed squares (ord=2)
+    verdict = detection.batched_monitor(mode, series[None, :] ** 2,
+                                        eps=[eps], staleness=[staleness],
+                                        persistence=[4], ord=2.0)
+    dev_step = int(verdict.detect_step[0, 0, 0, 0])
+    dev_conv = bool(verdict.converged[0, 0, 0, 0])
+
+    step, detected, _ = replay_monitor(series, mode, eps, eps, staleness, 4)
+    assert (step is not None) == dev_conv
+    if dev_conv:
+        assert step == dev_step
+        assert detected == pytest.approx(
+            float(verdict.detected_residual[0, 0, 0, 0]), rel=1e-5)
+
+
+def test_visible_series_flat_and_butterfly():
+    series = np.arange(10, dtype=np.float64)
+    flat = visible_series(series, "flat-nonblocking", K=2, p=4)
+    assert np.isinf(flat[:2]).all()
+    np.testing.assert_array_equal(flat[2:], series[:-2])
+
+    # p=4 butterfly: R=2, value launched at 2*floor((k+1)/2)-2 visible at k
+    bfly = visible_series(series, "butterfly", K=0, p=4)
+    assert np.isinf(bfly[0])
+    assert bfly[1] == series[0] and bfly[2] == series[0]
+    assert bfly[3] == series[2] and bfly[4] == series[2]
+    with pytest.raises(ValueError, match="power-of-two"):
+        visible_series(series, "butterfly", K=0, p=6)
+
+
+# ---------------------------------------------------------------------------
+# Replay determinism + structure
+# ---------------------------------------------------------------------------
+
+
+def test_replay_is_deterministic():
+    tr = _synthetic_trace()
+    wi = WhatIf(p=64, topology="tree", stragglers={3: 2.5})
+    a = replay(tr, _COST, wi)
+    b = replay(tr, _COST, wi)
+    assert a == b
+
+
+def test_replay_requires_a_residual_series():
+    tr = Trace("empty", 4, {"monitor": {"mode": "pfait", "eps": 1e-6}})
+    with pytest.raises(ValueError, match="reduce-event"):
+        replay(tr, _COST)
+
+
+def test_whatif_validation():
+    with pytest.raises(ValueError, match="topology"):
+        WhatIf(topology="ring")
+    with pytest.raises(ValueError, match="p="):
+        WhatIf(p=0)
+    with pytest.raises(ValueError, match="straggler"):
+        WhatIf(stragglers={0: -1.0})
+
+
+def test_staleness_moves_the_detection_step():
+    """More pipeline depth → later detection (the paper's K-step lag),
+    replayed from the same series."""
+    v0 = replay(_synthetic_trace(staleness=0), _COST)
+    v3 = replay(_synthetic_trace(staleness=3), _COST)
+    assert v0.converged and v3.converged
+    assert v3.predicted_detect_step == v0.predicted_detect_step + 3
+    assert v3.staleness_steps == 3
+
+
+def test_topology_wall_ordering():
+    """Same trace, same constants: barriered topologies cannot be cheaper
+    than flat non-blocking, and blocking also pays the residual pass."""
+    tr = _synthetic_trace()
+    walls = {t: replay(tr, _COST, WhatIf(topology=t)).predicted_wall_s
+             for t in TOPOLOGIES}
+    assert walls["flat-nonblocking"] < walls["tree"]
+    assert walls["tree"] < walls["flat-blocking"]
+    assert walls["flat-nonblocking"] < walls["butterfly"]
+
+
+def test_straggler_slows_the_whole_clock():
+    tr = _synthetic_trace()
+    base = replay(tr, _COST).predicted_wall_s
+    slow = replay(tr, _COST,
+                  WhatIf(stragglers={0: 4.0})).predicted_wall_s
+    assert slow > base * 1.5   # neighbour coupling drags everyone
+
+
+def test_shard_scaling_shrinks_per_step_compute():
+    """p_ref/p scaling: 4x the shards ≈ 1/4 the compute per step on the
+    non-blocking path (same step count — the series is held invariant)."""
+    tr = _synthetic_trace()
+    w8 = replay(tr, _COST, WhatIf(p=8)).predicted_wall_s
+    w32 = replay(tr, _COST, WhatIf(p=32)).predicted_wall_s
+    assert w32 < w8
+    v8 = replay(tr, _COST, WhatIf(p=8))
+    v32 = replay(tr, _COST, WhatIf(p=32))
+    assert v8.predicted_detect_step == v32.predicted_detect_step
+
+
+def test_butterfly_source_self_replay_not_approximate():
+    tr = _synthetic_trace(reduction="rdoubling", topology="butterfly",
+                          staleness=0)
+    v = replay(tr, _COST)
+    assert v.topology == "butterfly" and not v.approximate
+    # conversion away from the baked-in staleness is flagged
+    v2 = replay(tr, _COST, WhatIf(topology="flat-nonblocking"))
+    assert v2.approximate
+
+
+def test_what_if_table_skips_non_power_of_two_butterfly():
+    tr = _synthetic_trace()
+    rows = what_if_table(tr, _COST, [6, 8])
+    topos = {(r["p"], r["topology"]) for r in rows}
+    assert (8, "butterfly") in topos
+    assert (6, "butterfly") not in topos
+    assert (6, "tree") in topos
+
+
+def test_predict_wall_zero_steps_is_free():
+    assert predict_wall(0, 4, np.ones(4), np.zeros(4, np.int64),
+                        np.ones(4), _COST, "flat-nonblocking") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Self-replay on a real recorded device run (1 shard)
+# ---------------------------------------------------------------------------
+
+
+def test_device_self_replay_is_exact_on_detect_step():
+    from repro.launch.mesh import make_shard_mesh
+    from repro.runtime import api
+    from repro.solvers.convdiff import Stencil, make_rhs
+
+    n = 8
+    st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.9)
+    b = make_rhs(n, seed=0)
+    mon = detection.for_mode("pfait", eps_tilde=1e-6, staleness=2)
+    cfg = api.RuntimeConfig(monitor=mon, reduction="nonblocking",
+                            max_outer=500, record_trace=True)
+    rep = api.run_shard("convdiff", cfg, make_shard_mesh(1), n,
+                        np.zeros_like(b), b, stencil=st)
+    assert rep.converged
+
+    cost, report = fit_cost_model(rep.trace)
+    v = replay(rep.trace, cost)
+    assert v.converged
+    assert v.predicted_detect_step == rep.detect_step
+    assert v.staleness_steps == 2
+    assert not v.approximate
+    # self-replay wall reproduces the calibrating wall by construction
+    assert v.predicted_wall_s == pytest.approx(
+        rep.trace.meta["wall_s"], rel=0.02)
+    assert report["p_ref"] == 1 and "hop_s" in report["defaulted"]
+
+
+# ---------------------------------------------------------------------------
+# Calibration fits
+# ---------------------------------------------------------------------------
+
+
+def test_fit_cost_model_inverts_predict_wall():
+    """Closed-form round trip: a synthetic trace whose wall was produced
+    by predict_wall's own structural model recovers sweep_s exactly."""
+    for reduction, topology in (("nonblocking", "flat-nonblocking"),
+                                ("blocking", "flat-blocking")):
+        p, steps, sweep_s = 4, 50, 2e-3
+        f = DEFAULT_HOP_FRACTION
+        cost0 = CostModel(sweep_s=sweep_s, hop_s=f * sweep_s,
+                          residual_pass_s=sweep_s, p_ref=p)
+        wall = predict_wall(steps, p, np.ones(p), np.zeros(p, np.int64),
+                            np.ones(p), cost0, topology)
+        tr = _synthetic_trace(p=p, steps=steps, reduction=reduction,
+                              wall_s=wall)
+        fit, _ = fit_cost_model(tr)
+        assert fit.sweep_s == pytest.approx(cost0.sweep_s, rel=0.02), \
+            reduction
+        assert fit.hop_s == pytest.approx(cost0.hop_s, rel=0.02)
+
+
+def test_fit_cost_model_needs_a_wall():
+    tr = _synthetic_trace()
+    tr.meta["wall_s"] = 0.0
+    with pytest.raises(ValueError, match="wall"):
+        fit_cost_model(tr)
+
+
+def test_fit_delay_model_recovers_lognormal():
+    rng = np.random.default_rng(0)
+    base, sigma = 2e-3, 0.3
+    samples = base * np.exp(sigma * rng.standard_normal(400))
+    model, report = fit_delay_model(samples, dist="lognormal")
+    assert model.base == pytest.approx(base, rel=0.05)
+    assert model.sigma == pytest.approx(sigma, rel=0.15)
+    assert report["ok"], report   # KS accepts its own generating family
+
+
+def test_fit_delay_model_rejects_bad_input():
+    with pytest.raises(ValueError, match="samples"):
+        fit_delay_model([1e-3])
+    with pytest.raises(ValueError, match="> 0"):
+        fit_delay_model([1e-3, -1e-3])
+    with pytest.raises(ValueError, match="dist"):
+        fit_delay_model([1e-3, 2e-3], dist="gamma")
+
+
+def test_ks_statistic_bounded_by_discretisation_on_own_ecdf():
+    x = np.linspace(0.1, 1.0, 10)
+    # the right-continuous ECDF of the same points differs from the
+    # step-function comparison by at most one step height 1/n
+    ks = ks_statistic(x, lambda v: np.searchsorted(x, v, "right") / x.size)
+    assert ks <= 1.0 / x.size + 1e-12
+
+
+def test_engine_config_from_fit_scales_channel():
+    from repro.sim.calibrate import engine_config_from_fit
+
+    model, _ = fit_delay_model([1e-3, 1.1e-3, 0.9e-3, 1.05e-3])
+    cfg = engine_config_from_fit(model)
+    assert cfg.compute.base == model.base
+    assert cfg.channel.base == pytest.approx(
+        max(model.base * DEFAULT_HOP_FRACTION, model.floor))
+
+
+def test_fit_round_trips_into_whatif_consistency():
+    """The calibrate → replay loop is self-consistent: predicting the
+    calibrating configuration itself reproduces the measured wall."""
+    p, steps = 4, 80
+    tr = _synthetic_trace(p=p, steps=steps, wall_s=0.25)
+    cost, _ = fit_cost_model(tr)
+    v = replay(tr, cost)
+    expected = 0.25 * (v.predicted_outer_iters / steps)
+    assert v.predicted_wall_s == pytest.approx(expected, rel=0.03)
+    assert math.isfinite(v.predicted_wall_s)

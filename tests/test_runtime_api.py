@@ -1,0 +1,211 @@
+"""Unified runtime API tests: RuntimeConfig validation and conversion,
+bitwise parity between the unified entrypoints and the historical shims,
+and trace attachment through ``record_trace``.
+
+All in-process on the session's single device (tests/conftest.py) — the
+parity claims are shard-count independent (both paths run the identical
+compiled program), and the multi-shard API paths run in the gated
+``replay-smoke`` CI lane.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import detection
+from repro.launch.mesh import make_shard_mesh
+from repro.runtime import api
+from repro.runtime.api import DEFAULT_TRACE_LEN, RunReport, RuntimeConfig
+from repro.solvers.convdiff import Stencil, make_rhs
+
+
+def _mon(mode="pfait", eps_tilde=1e-6, staleness=2):
+    return detection.for_mode(mode, eps_tilde=eps_tilde, staleness=staleness,
+                              ord=2.0)
+
+
+def _convdiff(n=8, rho=0.9, seed=0):
+    st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=rho)
+    b = make_rhs(n, seed=seed)
+    return st, b, np.zeros_like(b)
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig validation + conversion
+# ---------------------------------------------------------------------------
+
+
+def test_config_validates_reduction_at_construction():
+    with pytest.raises(ValueError, match="reduction"):
+        RuntimeConfig(monitor=_mon(), reduction="gossip")
+
+
+def test_config_validates_max_outer():
+    with pytest.raises(ValueError, match="max_outer"):
+        RuntimeConfig(monitor=_mon(), max_outer=0)
+
+
+def test_to_shard_config_field_mapping():
+    cfg = RuntimeConfig(monitor=_mon(), reduction="blocking",
+                        inner_sweeps=3, halo_delay=1, contrib_lag=2,
+                        max_outer=123, trace_len=7, sweep="jacobi")
+    scfg = cfg.to_shard_config()
+    assert scfg.reduction == "blocking"
+    assert scfg.inner_sweeps == 3 and scfg.halo_delay == 1
+    assert scfg.contrib_lag == 2 and scfg.max_outer == 123
+    assert scfg.trace_len == 7
+    # blocking forces the effective monitor's staleness to zero
+    assert scfg.effective_monitor().staleness == 0
+
+
+def test_to_train_config_renames_knobs():
+    cfg = RuntimeConfig(monitor=_mon(), inner_sweeps=4, halo_delay=2,
+                        max_outer=99, num_batches=2, gamma=0.5)
+    tcfg = cfg.to_train_config()
+    assert tcfg.inner_steps == 4        # inner_sweeps -> inner_steps
+    assert tcfg.view_delay == 2         # halo_delay -> view_delay
+    assert tcfg.max_rounds == 99        # max_outer -> max_rounds
+    assert tcfg.num_batches == 2 and tcfg.gamma == 0.5
+
+
+def test_record_trace_raises_trace_len():
+    cfg = RuntimeConfig(monitor=_mon(), record_trace=True, max_outer=5000)
+    assert cfg.to_shard_config().trace_len == DEFAULT_TRACE_LEN
+    small = RuntimeConfig(monitor=_mon(), record_trace=True, max_outer=100)
+    assert small.to_shard_config().trace_len == 100
+    pinned = RuntimeConfig(monitor=_mon(), record_trace=True, trace_len=64)
+    assert pinned.to_shard_config().trace_len == 64
+
+
+def test_unknown_family_raises_keyerror():
+    cfg = RuntimeConfig(monitor=_mon())
+    with pytest.raises(KeyError, match="family"):
+        api.run_shard("heat", cfg, make_shard_mesh(1), 8,
+                      np.zeros((8, 8, 8)), np.zeros((8, 8, 8)))
+
+
+# ---------------------------------------------------------------------------
+# Shim parity: unified entrypoints vs the historical call paths
+# ---------------------------------------------------------------------------
+
+
+def test_run_shard_matches_legacy_make_runtime_bitwise():
+    from repro.runtime import shard_runtime as sr
+
+    n = 8
+    st, b, x0 = _convdiff(n)
+    mesh = make_shard_mesh(1)
+    cfg = RuntimeConfig(monitor=_mon(), reduction="nonblocking",
+                        max_outer=500, trace_len=512)
+    rep = api.run_shard("convdiff", cfg, mesh, n, x0, b, stencil=st)
+
+    legacy = jax.jit(sr.make_runtime("convdiff", cfg.to_shard_config(),
+                                     mesh, n, stencil=st))(x0, b)
+    assert isinstance(rep, RunReport)
+    assert rep.converged == bool(legacy.converged)
+    assert rep.outer_iters == int(legacy.outer_iters)
+    np.testing.assert_array_equal(np.asarray(rep.x), np.asarray(legacy.x))
+    np.testing.assert_array_equal(np.asarray(rep.raw.trace),
+                                  np.asarray(legacy.trace))
+    assert rep.detected_residual == float(legacy.residual)
+    assert rep.detect_step == rep.outer_iters - 1
+    # wall segments: build (compile) + run (steady-state)
+    names = [nm for nm, _ in rep.wall_segments]
+    assert names == ["build", "run"]
+    assert rep.wall_s > 0
+
+
+def test_run_train_matches_legacy_make_train_runtime_bitwise():
+    from repro.runtime import train_async as ta
+    from repro.solvers.mlfixed import MLFixedPointProblem
+
+    prob = MLFixedPointProblem(n=8, p=1, m_rows=16, task="lstsq", seed=3)
+    mesh = make_shard_mesh(1)
+    cfg = RuntimeConfig(monitor=_mon(eps_tilde=1e-6, staleness=1),
+                        reduction="nonblocking", inner_sweeps=2,
+                        max_outer=5000)
+    X0 = ta.init_replicas(prob, 1)
+    rep = api.run_train(prob, cfg, mesh, X0, prob.A, prob.y)
+
+    legacy = jax.jit(ta.make_train_runtime(prob, cfg.to_train_config(),
+                                           mesh))(X0, prob.A, prob.y)
+    assert rep.converged == bool(legacy.converged)
+    assert rep.outer_iters == int(legacy.rounds)
+    np.testing.assert_array_equal(np.asarray(rep.x), np.asarray(legacy.x))
+    assert rep.detected_residual == float(legacy.residual)
+
+
+def test_run_elastic_matches_legacy_run_elastic(tmp_path):
+    from repro.runtime import elastic as el
+
+    n = 8
+    st, b, x0 = _convdiff(n)
+    cfg = RuntimeConfig(monitor=_mon(staleness=1), reduction="nonblocking",
+                        contrib_lag=1, record_trace=True)
+    knobs = dict(stencil=st, p0=1, segment_len=25, max_segments=40)
+    rep = api.run_elastic("convdiff", cfg, n, x0, b, el.FaultPlan(),
+                          str(tmp_path / "a"), **knobs)
+    legacy = el.run_elastic("convdiff", cfg.to_shard_config(), n, x0, b,
+                            el.FaultPlan(), str(tmp_path / "b"), **knobs)
+    assert rep.converged == legacy.converged
+    assert rep.outer_iters == legacy.outer_iters
+    assert rep.detected_residual == legacy.detected_residual
+    np.testing.assert_array_equal(np.asarray(rep.x), np.asarray(legacy.x))
+    assert rep.membership_log == list(legacy.events)
+    # elastic trace: real segment boundaries + schema-valid events
+    rep.trace.validate()
+    assert rep.trace.source == "elastic"
+    assert len(rep.trace.events_of("segment")) == legacy.segments_run
+
+
+def test_timing_runs_append_rerun_segments():
+    n = 8
+    st, b, x0 = _convdiff(n)
+    cfg = RuntimeConfig(monitor=_mon(), max_outer=500)
+    rep = api.run_shard("convdiff", cfg, make_shard_mesh(1), n, x0, b,
+                        stencil=st, timing_runs=2)
+    names = [nm for nm, _ in rep.wall_segments]
+    assert names == ["build", "run", "rerun", "rerun"]
+    assert all(s > 0 for _, s in rep.wall_segments)
+
+
+# ---------------------------------------------------------------------------
+# Trace attachment through the unified API
+# ---------------------------------------------------------------------------
+
+
+def test_record_trace_attaches_schema_valid_trace():
+    n = 8
+    st, b, x0 = _convdiff(n)
+    cfg = RuntimeConfig(monitor=_mon(), max_outer=500, record_trace=True)
+    rep = api.run_shard("convdiff", cfg, make_shard_mesh(1), n, x0, b,
+                        stencil=st)
+    rep.trace.validate()
+    assert rep.trace.meta["outer_iters"] == rep.outer_iters
+    # the trace's wall is the steady-state run segment, not the compile
+    assert rep.trace.meta["wall_s"] == dict(rep.wall_segments)["run"]
+    # residual_history is the finite launched prefix
+    assert rep.residual_history.size > 0
+    assert np.isfinite(rep.residual_history).all()
+
+
+def test_no_record_trace_means_no_trace():
+    n = 8
+    st, b, x0 = _convdiff(n)
+    cfg = RuntimeConfig(monitor=_mon(), max_outer=500)
+    rep = api.run_shard("convdiff", cfg, make_shard_mesh(1), n, x0, b,
+                        stencil=st)
+    assert rep.trace is None
+
+
+def test_train_record_trace_source_is_train():
+    from repro.runtime import train_async as ta
+    from repro.solvers.mlfixed import MLFixedPointProblem
+
+    prob = MLFixedPointProblem(n=8, p=1, m_rows=16, task="lstsq", seed=3)
+    cfg = RuntimeConfig(monitor=_mon(staleness=1), inner_sweeps=2,
+                        max_outer=5000, record_trace=True)
+    rep = api.run_train(prob, cfg, make_shard_mesh(1),
+                        ta.init_replicas(prob, 1), prob.A, prob.y)
+    rep.trace.validate()
+    assert rep.trace.source == "train"
+    assert rep.trace.meta["reduction"] == "nonblocking"

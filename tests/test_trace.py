@@ -1,0 +1,202 @@
+"""Trace schema tests: event validation, JSONL round-trip, and the two
+emitters (engine observer + device-runtime adapter) producing schema-valid
+traces.
+
+The session runs on ONE device (tests/conftest.py), so device-adapter
+tests use a 1-shard mesh — the trace machinery (per-step events, reduce
+series, monitor metadata) is shard-count independent.
+"""
+import numpy as np
+import pytest
+
+from repro.core import detection, trace as tracemod
+from repro.core.trace import (
+    EVENT_KINDS,
+    EngineTraceObserver,
+    Trace,
+    event,
+    validate_trace,
+)
+
+
+# ---------------------------------------------------------------------------
+# Event / trace construction and validation
+# ---------------------------------------------------------------------------
+
+
+def test_event_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        event("barrier", 0.0)
+
+
+def test_event_schema_keys_cannot_be_shadowed():
+    # the schema keys are named parameters: a payload dict carrying one is
+    # a duplicate keyword, rejected by the call itself
+    with pytest.raises(TypeError):
+        event("reduce", 0.0, **{"kind": "halo"})
+    with pytest.raises(TypeError):
+        event("reduce", 0.0, **{"t": 1.0})
+
+
+def test_events_of_rejects_unknown_kind():
+    tr = Trace("test", 1)
+    with pytest.raises(ValueError, match="kind"):
+        tr.events_of("barrier")
+
+
+def test_validate_catches_bad_header_and_events():
+    tr = Trace("test", 1)
+    tr.header["p"] = 0
+    with pytest.raises(ValueError, match="worker count"):
+        tr.validate()
+
+    tr = Trace("test", 1)
+    tr.append({"kind": "sweep", "t": 0.0, "w": 0})   # missing "step"
+    with pytest.raises(ValueError, match="step"):
+        tr.validate()
+    assert not validate_trace(tr)
+
+    tr = Trace("test", 1)
+    tr.append({"kind": "sweep", "t": float("nan"), "w": 0, "step": 0})
+    with pytest.raises(ValueError, match="timestamp"):
+        tr.validate()
+
+
+def test_jsonl_round_trip_preserves_fingerprint():
+    tr = Trace("test", 4, {"reduction": "nonblocking", "wall_s": 0.5})
+    for k in range(5):
+        for w in range(4):
+            tr.add("sweep", 0.1 * (k + 1), w=w, step=k, inner=2)
+        tr.add("reduce", 0.1 * (k + 1), step=k, residual=0.9 ** k)
+    tr.add("finish", 0.5, step=4, terminated=True)
+    tr.validate()
+
+    back = Trace.loads(tr.dumps())
+    back.validate()
+    assert back.fingerprint() == tr.fingerprint()
+    assert back.header == tr.header
+    assert back.events == tr.events
+
+
+def test_load_dump_file_round_trip(tmp_path):
+    tr = Trace("test", 2)
+    tr.add("reduce", 1.0, step=0, residual=0.5)
+    path = tmp_path / "trace.jsonl"
+    tr.dump(path)
+    assert Trace.load(path).fingerprint() == tr.fingerprint()
+
+
+def test_loads_rejects_foreign_schema():
+    tr = Trace("test", 1)
+    text = tr.dumps().replace(tracemod.SCHEMA, "other-schema/9")
+    with pytest.raises(ValueError, match="schema"):
+        Trace.loads(text)
+
+
+def test_residual_series_keeps_inf_gaps():
+    """Steps with no completed reduction (butterfly warm-up) stay +inf so
+    replay sees the same step indexing the device monitor did."""
+    tr = Trace("test", 4)
+    tr.add("reduce", 1.0, step=1, residual=0.5)
+    tr.add("reduce", 2.0, step=3, residual=0.25)
+    series = tr.residual_series()
+    assert len(series) == 4
+    assert np.isinf(series[0]) and np.isinf(series[2])
+    assert series[1] == 0.5 and series[3] == 0.25
+
+
+# ---------------------------------------------------------------------------
+# Engine observer emitter
+# ---------------------------------------------------------------------------
+
+
+def test_engine_observer_emits_schema_valid_trace():
+    from repro.core.async_engine import AsyncEngine, DelayModel, EngineConfig
+    from repro.core.protocols import PFAIT
+    from repro.solvers.convdiff import ConvDiffProblem
+
+    prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=0)
+    obs = EngineTraceObserver(p=4)
+    cfg = EngineConfig(compute=DelayModel(1e-3, sigma=0.3),
+                       channel=DelayModel(5e-4, sigma=0.5),
+                       seed=0, max_iters=30_000)
+    result = AsyncEngine(prob, cfg, PFAIT(1e-5, ord=prob.ord),
+                         recorder=obs).run()
+    assert result.terminated
+
+    tr = obs.trace
+    tr.validate()
+    assert tr.source == "engine" and tr.p == 4
+    kinds = {e["kind"] for e in tr.events}
+    # PFAIT is protocol-free: contributions ride the halo ("data")
+    # messages, so no separate reduce sends appear — exactly the paper
+    assert {"sweep", "halo", "detect", "finish"} <= kinds
+    # virtual timestamps are the engine clock: non-negative, finite
+    assert all(e["t"] >= 0 for e in tr.events)
+    fin = tr.events_of("finish")
+    assert len(fin) == 1 and fin[0]["terminated"]
+    # round-trips like any other schema trace
+    assert Trace.loads(tr.dumps()).fingerprint() == tr.fingerprint()
+
+
+def test_engine_observer_record_sends_off_drops_message_events():
+    from repro.core.async_engine import AsyncEngine, DelayModel, EngineConfig
+    from repro.core.protocols import PFAIT
+    from repro.solvers.convdiff import ConvDiffProblem
+
+    prob = ConvDiffProblem(n=8, p=4, rho=0.85, seed=0)
+    obs = EngineTraceObserver(p=4, record_sends=False)
+    cfg = EngineConfig(compute=DelayModel(1e-3, sigma=0.3),
+                       channel=DelayModel(5e-4, sigma=0.5),
+                       seed=0, max_iters=30_000)
+    AsyncEngine(prob, cfg, PFAIT(1e-5, ord=prob.ord), recorder=obs).run()
+    assert not obs.trace.events_of("halo")
+    assert not obs.trace.events_of("reduce")
+    assert obs.trace.events_of("sweep")   # sweeps still recorded
+
+
+# ---------------------------------------------------------------------------
+# Device-runtime adapter (through the unified API, 1-shard mesh)
+# ---------------------------------------------------------------------------
+
+
+def _device_trace(reduction="nonblocking", staleness=2):
+    from repro.launch.mesh import make_shard_mesh
+    from repro.runtime import api
+    from repro.solvers.convdiff import Stencil, make_rhs
+
+    n = 8
+    st = Stencil.for_contraction(n, 1.0, (1.0, 1.0, 1.0), rho=0.9)
+    b = make_rhs(n, seed=0)
+    mon = detection.for_mode("pfait", eps_tilde=1e-6, staleness=staleness)
+    cfg = api.RuntimeConfig(monitor=mon, reduction=reduction,
+                            max_outer=500, record_trace=True)
+    rep = api.run_shard("convdiff", cfg, make_shard_mesh(1), n,
+                        np.zeros_like(b), b, stencil=st)
+    return rep
+
+
+def test_shard_adapter_emits_schema_valid_trace():
+    rep = _device_trace()
+    assert rep.converged
+    tr = rep.trace
+    tr.validate()
+    assert tr.source == "shard" and tr.p == 1
+    assert tr.meta["reduction"] == "nonblocking"
+    assert tr.meta["synthetic_t"] is True   # jitted loop: interpolated t
+    mon = tr.meta["monitor"]
+    assert mon["mode"] == "pfait" and mon["staleness"] == 2
+    # the reduce series is the launched-residual ledger, step-indexed
+    series = tr.residual_series()
+    assert len(series) == rep.outer_iters
+    finite = [v for v in series if np.isfinite(v)]
+    assert finite and finite[-1] < 1e-5
+    # detection landed and is on the trace
+    det = tr.events_of("detect")
+    assert len(det) == 1 and det[0]["step"] == rep.detect_step
+    assert all(e["kind"] in EVENT_KINDS for e in tr.events)
+
+
+def test_shard_adapter_trace_round_trips():
+    tr = _device_trace().trace
+    assert Trace.loads(tr.dumps()).fingerprint() == tr.fingerprint()
