@@ -49,6 +49,21 @@ Metrics and tolerances (the CI contract):
   - train ``detected_round`` — exact (seeded device programs are
     deterministic; a drifting round means the monitor wiring changed).
 
+* ``mesh_smoke`` (BENCH_mesh_smoke.json):
+  - per-mesh parity booleans (``trajectory_ok`` vs the global reference,
+    ``overlap_bitwise_ok`` — comm-overlapped run bitwise-identical to the
+    non-overlapped one under heterogeneous knobs) — exact,
+  - per-cell ``terminated`` / ``false_detection`` of the mesh-shape ×
+    reduction × monitor detection matrix — exact (seeded, deterministic),
+  - ``hbm.*.hbm_bytes_per_device_per_iter`` per variant — exact
+    (pinned-jax lowering; the overlap variant must stay the cheapest,
+    which the bench itself asserts before writing the report),
+  - ``walltime.saving_2d_vs_1d`` and ``walltime.saving_overlap2d_vs_1d``
+    — one-sided floors at −30%.  The 2-D saving is the tentpole perf
+    claim; the overlap saving is < 1 on host-emulated devices (serial
+    collectives leave no latency to hide) and is tracked as a regression
+    floor against the committed baseline rather than an absolute target.
+
 * ``replay_smoke`` (BENCH_replay_smoke.json):
   - measured ``detect_step_ok`` / ``wall_within_20pct`` booleans and both
     detection steps (recorded + predicted) — exact: the ISSUE acceptance
@@ -187,6 +202,53 @@ def _shard_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
         "floor",
         0.30,
     )
+
+
+def _mesh_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
+    for name, brow in sorted(base["parity"].items()):
+        frow = fresh["parity"][name]
+        yield (f"parity.{name}.trajectory_ok", float(brow["trajectory_ok"]),
+               float(frow["trajectory_ok"]), "exact", 0.0)
+        yield (f"parity.{name}.overlap_bitwise_ok",
+               float(brow["overlap_bitwise_ok"]),
+               float(frow["overlap_bitwise_ok"]), "exact", 0.0)
+
+    def detect_cells(rep):
+        return {
+            ("x".join(str(s) for s in c["mesh_shape"]), c["reduction"],
+             c["mode"], c["seed"]): c
+            for c in rep["detect"]
+        }
+
+    fresh_cells = detect_cells(fresh)
+    for key, bcell in sorted(detect_cells(base).items()):
+        fcell = fresh_cells[key]
+        name = "/".join(str(k) for k in key)
+        yield (f"detect.{name}.terminated", float(bcell["terminated"]),
+               float(fcell["terminated"]), "exact", 0.0)
+        yield (f"detect.{name}.false_detection",
+               float(bcell["false_detection"]),
+               float(fcell["false_detection"]), "exact", 0.0)
+
+    for variant in ("1d", "2d", "2d_overlap"):
+        yield (
+            f"hbm.{variant}.hbm_bytes_per_device_per_iter",
+            base["hbm"][variant]["hbm_bytes_per_device_per_iter"],
+            fresh["hbm"][variant]["hbm_bytes_per_device_per_iter"],
+            "exact",
+            0.0,
+        )
+    # the tentpole wall claim (2-D beats the 1-D pencil) plus the tracked
+    # overlap ratio — both median-of-round ratios, so they transfer across
+    # runner hardware; only a LOSS vs the baseline fails
+    for metric in ("saving_2d_vs_1d", "saving_overlap2d_vs_1d"):
+        yield (
+            f"walltime.{metric}",
+            base["walltime"][metric],
+            fresh["walltime"][metric],
+            "floor",
+            0.30,
+        )
 
 
 def _elastic_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
@@ -369,6 +431,7 @@ BENCHES = {
     "fused_smoke": _fused_smoke,
     "reliability_smoke": _reliability_smoke,
     "shard_smoke": _shard_smoke,
+    "mesh_smoke": _mesh_smoke,
     "elastic_smoke": _elastic_smoke,
     "ml_smoke": _ml_smoke,
     "replay_smoke": _replay_smoke,

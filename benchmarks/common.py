@@ -446,6 +446,48 @@ def _cell_shard_hbm(**kw) -> Dict:
     return shard_hbm(**kw)
 
 
+# -- mesh-runtime cells (benchmarks/bench_mesh.py) ---------------------------
+#
+# The 2-D/3-D block-mesh variants of the shard cells: same multi-device
+# platform requirement, plus the overlap-bitwise parity anchor and the
+# per-mesh-shape traffic shadow.
+
+
+@cell_kind("mesh_parity", env=("jax",),
+           cost=lambda s: s.get("n", 16) ** 3 * s.get("max_outer", 500))
+def _cell_mesh_parity(**kw) -> Dict:
+    """Synchronous parity of the block-mesh runtime on one mesh shape, plus
+    the overlap path's bitwise equivalence to the non-overlap path."""
+    from benchmarks.bench_mesh import mesh_parity
+
+    return mesh_parity(**kw)
+
+
+@cell_kind("mesh_detect", env=("jax",),
+           cost=lambda s: s.get("n", 16) ** 3 * s.get("max_outer", 3000))
+def _cell_mesh_detect(**kw) -> Dict:
+    """One asynchronous block-mesh run, false-detection scored."""
+    from benchmarks.bench_mesh import mesh_detect
+
+    return mesh_detect(**kw)
+
+
+@cell_kind("mesh_timed", cache=False)  # timing cell: always re-measured
+def _cell_mesh_timed(**kw) -> Dict:
+    """Round-robin wall-clock of the 1-D/2-D/overlapped-2-D variants."""
+    from benchmarks.bench_mesh import mesh_timed
+
+    return mesh_timed(**kw)
+
+
+@cell_kind("mesh_hbm", env=("jax",))
+def _cell_mesh_hbm(**kw) -> Dict:
+    """HLO-derived HBM/wire bytes per outer iteration of one mesh variant."""
+    from benchmarks.bench_mesh import mesh_hbm
+
+    return mesh_hbm(**kw)
+
+
 # -- elastic cells (benchmarks/bench_elastic.py) -----------------------------
 
 

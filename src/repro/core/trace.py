@@ -268,9 +268,23 @@ def trace_from_shard_run(result, cfg, p: int, wall_s: float,
     inner = _per_shard(inner_field, p, "inner").tolist()
     delay = _per_shard(delay_field, p, "delay").tolist()
     lag = _per_shard(cfg.contrib_lag, p, "contrib_lag").tolist()
+    mesh_shape = tuple(getattr(cfg, "mesh_shape", None) or (p,))
+    # per-worker exchanged faces ((label, peer) pairs) on multi-axis meshes —
+    # the 1-D pencil keeps its historical single halo event per worker
+    faces: List[List] = [[] for _ in range(p)]
+    if len(mesh_shape) > 1:
+        import math
+
+        from repro.solvers.partition import MeshPartition
+
+        # face topology is n-independent; any n each axis divides will do
+        part = MeshPartition(math.lcm(*mesh_shape), mesh_shape)
+        faces = [[(part.face(w, j), j) for j in part.neighbors(w)]
+                 for w in range(p)]
     header_meta = {
         "reduction": cfg.reduction,
         "topology": mode.topology,
+        "mesh_shape": list(mesh_shape),
         "monitor": {
             "mode": mon.mode, "eps": float(mon.eps),
             "eps_tilde": float(mon.eps_tilde),
@@ -295,7 +309,12 @@ def trace_from_shard_run(result, cfg, p: int, wall_s: float,
         t = (k + 1) * dt
         for w in range(p):
             tr.add("sweep", t, w=w, step=k, inner=inner[w])
-            tr.add("halo", t, w=w, step=k, delay=delay[w])
+            if faces[w]:
+                for label, peer in faces[w]:
+                    tr.add("halo", t, w=w, step=k, delay=delay[w],
+                           face=label, peer=peer)
+            else:
+                tr.add("halo", t, w=w, step=k, delay=delay[w])
         if np.isfinite(series[k]):
             tr.add("reduce", t, step=k, residual=series[k], lag=max(lag),
                    rounds_per_value=rpv)

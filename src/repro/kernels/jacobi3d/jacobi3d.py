@@ -172,6 +172,283 @@ def fused_rbgs_sweep_residual(
     return new, res
 
 
+# ---------------------------------------------------------------------------
+# Halo-consuming flavours: explicit face buffers for all partitioned faces
+# ---------------------------------------------------------------------------
+#
+# The multi-axis shard runtime exchanges up to six face planes (x/y/z may
+# all be partitioned) and hands them to the kernel as-is — no host-side
+# ghost assembly, no assumption that y/z are contiguous.  Each tile builds
+# its ghosted window in-register: the core tile plus thin clamped loads of
+# the neighbouring rows/columns of the *unghosted* block, with the halo
+# plane substituted wherever the window crosses the block boundary.
+# Diagonal window corners stay zero for the ±1 window (the 7-point star
+# never reads them); the ±2 RB-GS window picks its in-block corner cells
+# explicitly (they feed the ring's colour-0 recompute on interior tiles).
+
+
+def _pick_row(x_ref, hxm_ref, hxp_ref, q, y0, ny, bx, bz, dtype):
+    """(1, ny, bz) window row at global row ``q``, cols ``[y0, y0+ny)``:
+    an in-block row of x, the x∓ halo plane at q == -1/bx, zeros beyond."""
+    loaded = pl.load(x_ref, (pl.ds(jnp.clip(q, 0, bx - 1), 1),
+                             pl.ds(y0, ny), pl.ds(0, bz)))
+    hm = pl.load(hxm_ref, (pl.ds(y0, ny), pl.ds(0, bz)))[None]
+    hp = pl.load(hxp_ref, (pl.ds(y0, ny), pl.ds(0, bz)))[None]
+    v = jnp.where(q == -1, hm.astype(dtype),
+                  jnp.where(q == bx, hp.astype(dtype), loaded))
+    return jnp.where((q < -1) | (q > bx), jnp.zeros_like(v), v)
+
+
+def _pick_col(x_ref, hym_ref, hyp_ref, q, x0, nx, by, bz, dtype):
+    """(nx, 1, bz) window column at global col ``q``, rows ``[x0, x0+nx)``."""
+    loaded = pl.load(x_ref, (pl.ds(x0, nx),
+                             pl.ds(jnp.clip(q, 0, by - 1), 1), pl.ds(0, bz)))
+    hm = pl.load(hym_ref, (pl.ds(x0, nx), pl.ds(0, bz)))[:, None]
+    hp = pl.load(hyp_ref, (pl.ds(x0, nx), pl.ds(0, bz)))[:, None]
+    v = jnp.where(q == -1, hm.astype(dtype),
+                  jnp.where(q == by, hp.astype(dtype), loaded))
+    return jnp.where((q < -1) | (q > by), jnp.zeros_like(v), v)
+
+
+def _pick_cell(x_ref, halo_refs, qx, qy, bx, by, bz, dtype):
+    """(1, 1, bz) window cell at global (qx, qy): in-block x, the face halo
+    when exactly one coordinate is a ghost, zero otherwise (both-ghost
+    diagonal cells are arithmetically dead in both kernels)."""
+    hxm_ref, hxp_ref, hym_ref, hyp_ref = halo_refs
+    loaded = pl.load(x_ref, (pl.ds(jnp.clip(qx, 0, bx - 1), 1),
+                             pl.ds(jnp.clip(qy, 0, by - 1), 1), pl.ds(0, bz)))
+    hxm = pl.load(hxm_ref, (pl.ds(jnp.clip(qy, 0, by - 1), 1),
+                            pl.ds(0, bz)))[None]
+    hxp = pl.load(hxp_ref, (pl.ds(jnp.clip(qy, 0, by - 1), 1),
+                            pl.ds(0, bz)))[None]
+    hym = pl.load(hym_ref, (pl.ds(jnp.clip(qx, 0, bx - 1), 1),
+                            pl.ds(0, bz)))[:, None]
+    hyp = pl.load(hyp_ref, (pl.ds(jnp.clip(qx, 0, bx - 1), 1),
+                            pl.ds(0, bz)))[:, None]
+    in_x = (qx >= 0) & (qx < bx)
+    in_y = (qy >= 0) & (qy < by)
+    v = jnp.where(in_x & in_y, loaded, jnp.zeros_like(loaded))
+    v = jnp.where((qx == -1) & in_y, hxm.astype(dtype), v)
+    v = jnp.where((qx == bx) & in_y, hxp.astype(dtype), v)
+    v = jnp.where((qy == -1) & in_x, hym.astype(dtype), v)
+    v = jnp.where((qy == by) & in_x, hyp.astype(dtype), v)
+    return v
+
+
+def _pick_zplane(gz_ref, qx, nx, qy, ny, bx, by):
+    """(nx, ny) window of a z halo plane at rows/cols from (qx, qy); zeros
+    where the window leaves the block (ghost rows' z-corners are dead)."""
+    v = pl.load(gz_ref, (pl.ds(jnp.clip(qx, 0, bx - nx), nx),
+                         pl.ds(jnp.clip(qy, 0, by - ny), ny)))
+    ok = (qx >= 0) & (qx + nx <= bx) & (qy >= 0) & (qy + ny <= by)
+    return jnp.where(ok, v, jnp.zeros_like(v))
+
+
+def _halo_window(x_ref, halo_refs, i, j, tx, ty, bx, by, bz, pad, dtype):
+    """Assemble the (tx+2·pad, ty+2·pad, bz+2) ghosted window of tile
+    (i, j) from the unghosted block + six face planes.  ``pad=1`` is the
+    Jacobi ±1 window; ``pad=2`` the RB-GS ±2 window (its outermost frame
+    carries real in-block values where they exist — interior tiles consume
+    them through the ring's colour-0 recompute — and dead zeros/halos at
+    the block edge, which the kernel's ``real`` mask freezes)."""
+    hxm, hxp, hym, hyp, hzm, hzp = halo_refs
+    x0, y0 = i * tx, j * ty
+
+    def zrow(qx, qy0, ny):
+        zm = _pick_zplane(hzm, qx, 1, qy0, ny, bx, by)[:, :, None]
+        zp = _pick_zplane(hzp, qx, 1, qy0, ny, bx, by)[:, :, None]
+        return zm.astype(dtype), zp.astype(dtype)
+
+    def row_slab(qx):
+        """(1, ty + 2·pad, bz + 2) full-width window row at global row qx."""
+        core = _pick_row(x_ref, hxm, hxp, qx, y0, ty, bx, bz, dtype)
+        zm, zp = zrow(qx, y0, ty)
+        parts = [jnp.concatenate([zm, core, zp], axis=2)]
+        for dq in range(1, pad + 1):
+            for side, qy in ((0, y0 - dq), (1, y0 + ty + dq - 1)):
+                cell = _pick_cell(x_ref, (hxm, hxp, hym, hyp), qx, qy,
+                                  bx, by, bz, dtype)
+                czm = _pick_zplane(hzm, qx, 1, qy, 1, bx, by)[:, :, None]
+                czp = _pick_zplane(hzp, qx, 1, qy, 1, bx, by)[:, :, None]
+                cz = jnp.concatenate([czm.astype(dtype), cell,
+                                      czp.astype(dtype)], axis=2)
+                parts = [cz] + parts if side == 0 else parts + [cz]
+        return jnp.concatenate(parts, axis=1)
+
+    # middle slab: the core tile, y-extended by pad picked columns per side
+    core = pl.load(x_ref, (pl.ds(x0, tx), pl.ds(y0, ty), pl.ds(0, bz)))
+    zm = _pick_zplane(hzm, x0, tx, y0, ty, bx, by)[:, :, None].astype(dtype)
+    zp = _pick_zplane(hzp, x0, tx, y0, ty, bx, by)[:, :, None].astype(dtype)
+    mid_parts = [jnp.concatenate([zm, core, zp], axis=2)]
+    for dq in range(1, pad + 1):
+        for side, qy in ((0, y0 - dq), (1, y0 + ty + dq - 1)):
+            col = _pick_col(x_ref, hym, hyp, qy, x0, tx, by, bz, dtype)
+            czm = _pick_zplane(hzm, x0, tx, qy, 1, bx, by)[:, :, None]
+            czp = _pick_zplane(hzp, x0, tx, qy, 1, bx, by)[:, :, None]
+            cz = jnp.concatenate([czm.astype(dtype), col,
+                                  czp.astype(dtype)], axis=2)
+            mid_parts = [cz] + mid_parts if side == 0 else mid_parts + [cz]
+    mid = jnp.concatenate(mid_parts, axis=1)
+
+    slabs = [mid]
+    for dq in range(1, pad + 1):
+        slabs = [row_slab(x0 - dq)] + slabs + [row_slab(x0 + tx + dq - 1)]
+    return jnp.concatenate(slabs, axis=0)
+
+
+def _halo_kernel(x_ref, hxm, hxp, hym, hyp, hzm, hzp, b_ref, coef_ref,
+                 new_ref, res_ref, *, op: str, linf: bool, tx: int, ty: int,
+                 bx: int, by: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bz = x_ref.shape[2]
+    g = _halo_window(x_ref, (hxm, hxp, hym, hyp, hzm, hzp), i, j, tx, ty,
+                     bx, by, bz, pad=1, dtype=x_ref.dtype)
+    b = b_ref[...]
+    c = coef_ref[...]
+    diag, xm, xp, ym, yp, zm, zp = c[0], c[1], c[2], c[3], c[4], c[5], c[6]
+    off = _stencil_off(g, xm, xp, ym, yp, zm, zp)
+    r = b - (diag * g[1:-1, 1:-1, 1:-1] + off)
+    if op == "sweep":
+        new_ref[...] = (b - off) / diag
+    else:
+        new_ref[...] = g[1:-1, 1:-1, 1:-1]
+    if linf:
+        res_ref[0, 0] = jnp.max(jnp.abs(r)).astype(jnp.float32)
+    else:
+        res_ref[0, 0] = jnp.sum((r * r).astype(jnp.float32))
+
+
+def _rbgs_halo_kernel(x_ref, hxm, hxp, hym, hyp, hzm, hzp, b2_ref, coef_ref,
+                      oxyz_ref, new_ref, res_ref, *, linf: bool, tx: int,
+                      ty: int, bx: int, by: int):
+    """The ±2-window hybrid RB-GS sweep over an unghosted block + six face
+    buffers — the same single-pass recompute scheme as ``_rbgs_kernel``,
+    with the window assembled in-register instead of pre-ghosted."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bz = x_ref.shape[2]
+    w = _halo_window(x_ref, (hxm, hxp, hym, hyp, hzm, hzp), i, j, tx, ty,
+                     bx, by, bz, pad=2, dtype=x_ref.dtype)
+    bw = pl.load(b2_ref, (pl.ds(i * tx, tx + 2), pl.ds(j * ty, ty + 2),
+                          pl.ds(0, bz)))
+    c = coef_ref[...]
+    diag, xm, xp, ym, yp, zm, zp = c[0], c[1], c[2], c[3], c[4], c[5], c[6]
+    off_w = _stencil_off(w, xm, xp, ym, yp, zm, zp)    # (tx+2, ty+2, bz)
+    x_w = w[1:-1, 1:-1, 1:-1]
+    shp = (tx + 2, ty + 2, bz)
+    gx = jax.lax.broadcasted_iota(jnp.int32, shp, 0) + i * tx - 1
+    gy = jax.lax.broadcasted_iota(jnp.int32, shp, 1) + j * ty - 1
+    gz = jax.lax.broadcasted_iota(jnp.int32, shp, 2)
+    parity = jnp.mod(gx + gy + gz + oxyz_ref[0], 2)
+    real = (gx >= 0) & (gx < bx) & (gy >= 0) & (gy < by)
+    upd0 = jnp.where((parity == 0) & real, (bw - off_w) / diag, x_w)
+    w1 = w.at[1:-1, 1:-1, 1:-1].set(upd0)
+    off1 = _stencil_off(w1, xm, xp, ym, yp, zm, zp)[1:-1, 1:-1, :]
+    b_t = bw[1:-1, 1:-1, :]
+    new1 = (b_t - off1) / diag
+    new_ref[...] = jnp.where(parity[1:-1, 1:-1, :] == 1, new1,
+                             upd0[1:-1, 1:-1, :])
+    r = b_t - (diag * x_w[1:-1, 1:-1, :] + off_w[1:-1, 1:-1, :])
+    if linf:
+        res_ref[0, 0] = jnp.max(jnp.abs(r)).astype(jnp.float32)
+    else:
+        res_ref[0, 0] = jnp.sum((r * r).astype(jnp.float32))
+
+
+def _halo6(halos, b_like):
+    """Normalise the six face planes to the block dtype (zero planes for
+    unpartitioned/boundary faces are the caller's contract)."""
+    gxm, gxp, gym, gyp, gzm, gzp = halos
+    return tuple(h.astype(b_like.dtype) for h in
+                 (gxm, gxp, gym, gyp, gzm, gzp))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "op", "linf", "interpret"))
+def fused_sweep_residual_halo(
+    x: jax.Array,              # [bx, by, bz] unghosted block
+    halos,                     # 6 face planes (gxm, gxp, gym, gyp, gzm, gzp)
+    b: jax.Array,              # [bx, by, bz]
+    stencil_coefs: jax.Array,  # [7] (diag, xm, xp, ym, yp, zm, zp)
+    tile: Tuple[int, int] = (8, 128),
+    op: str = "sweep",
+    linf: bool = True,
+    interpret: bool = False,
+):
+    """Jacobi sweep + input-state residual partials from an unghosted block
+    and explicit halo buffers for every partitioned face — no host-side
+    ghost assembly (one fewer HBM materialisation of the (bx+2)³ array).
+
+    Returns ``(new_block [bx,by,bz], residual partials [nx, ny])``."""
+    bx, by, bz = b.shape
+    tx, ty = min(tile[0], bx), min(tile[1], by)
+    assert bx % tx == 0 and by % ty == 0, (bx, by, tx, ty)
+    nx, ny = bx // tx, by // ty
+    coefs = stencil_coefs.astype(b.dtype)
+    faces = _halo6(halos, b)
+
+    new, res = pl.pallas_call(
+        functools.partial(_halo_kernel, op=op, linf=linf, tx=tx, ty=ty,
+                          bx=bx, by=by),
+        grid=(nx, ny),
+        in_specs=[pl.BlockSpec(memory_space=_ANY)] * 7 + [
+            pl.BlockSpec((tx, ty, bz), lambda i, j: (i, j, 0)),
+            pl.BlockSpec(memory_space=_ANY),       # 7 scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((tx, ty, bz), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bx, by, bz), b.dtype),
+            jax.ShapeDtypeStruct((nx, ny), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, *faces, b, coefs)
+    return new, res
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "linf", "interpret"))
+def fused_rbgs_sweep_residual_halo(
+    x: jax.Array,              # [bx, by, bz] unghosted block
+    halos,                     # 6 face planes (gxm, gxp, gym, gyp, gzm, gzp)
+    b: jax.Array,              # [bx, by, bz]
+    stencil_coefs: jax.Array,  # [7] (diag, xm, xp, ym, yp, zm, zp)
+    oxyz: jax.Array,           # i32 scalar: ox + oy + oz (checkerboard phase)
+    tile: Tuple[int, int] = (8, 128),
+    linf: bool = True,
+    interpret: bool = False,
+):
+    """Hybrid RB-GS sweep + pre-sweep residual partials from an unghosted
+    block and explicit halo buffers (the halo-consuming twin of
+    ``fused_rbgs_sweep_residual``)."""
+    bx, by, bz = b.shape
+    tx, ty = min(tile[0], bx), min(tile[1], by)
+    assert bx % tx == 0 and by % ty == 0, (bx, by, tx, ty)
+    nx, ny = bx // tx, by // ty
+    coefs = stencil_coefs.astype(b.dtype)
+    faces = _halo6(halos, b)
+    b2 = jnp.pad(b, ((1, 1), (1, 1), (0, 0)))
+    oxyz_arr = jnp.asarray(oxyz, jnp.int32).reshape((1,))
+
+    new, res = pl.pallas_call(
+        functools.partial(_rbgs_halo_kernel, linf=linf, tx=tx, ty=ty,
+                          bx=bx, by=by),
+        grid=(nx, ny),
+        in_specs=[pl.BlockSpec(memory_space=_ANY)] * 10,
+        out_specs=[
+            pl.BlockSpec((tx, ty, bz), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bx, by, bz), b.dtype),
+            jax.ShapeDtypeStruct((nx, ny), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, *faces, b2, coefs, oxyz_arr)
+    return new, res
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "op", "linf", "interpret"))
 def fused_sweep_residual(
     g: jax.Array,              # [(bx+2), (by+2), (bz+2)] ghosted block

@@ -26,7 +26,9 @@ import numpy as np
 
 from repro.kernels.jacobi3d.jacobi3d import (
     fused_rbgs_sweep_residual,
+    fused_rbgs_sweep_residual_halo,
     fused_sweep_residual,
+    fused_sweep_residual_halo,
 )
 from repro.kernels.jacobi3d.ref import fused_sweep_residual_ref, residual_partials
 from repro.solvers import gauss_seidel
@@ -132,6 +134,82 @@ def sweep_with_contribution(st: Stencil, x: jax.Array, ghosts, b: jax.Array,
     new, parts = _sweep_impl(st, x, ghosts, b, sweep, ox, oy, tile, linf,
                              interpret)
     return new, (jnp.max(parts) if linf else jnp.sum(parts))
+
+
+def _sweep_halo_impl(st, x, halos, b, sweep, ox, oy, oz, tile, linf,
+                     interpret):
+    """Halo-consuming twin of ``_sweep_impl``: unghosted block + six
+    explicit face planes (multi-axis shard meshes — any of x/y/z may be
+    partitioned).  Off-TPU the jnp path assembles ``ghosted6`` and runs the
+    same solver math the single-device reference uses (bitwise parity of
+    the 1-shard mesh); on TPU the halo kernels skip the assembly."""
+    from repro.solvers.fixed_point import ghosted6  # function-level: no cycle
+
+    use_interp = (not _on_tpu()) if interpret is None else interpret
+    if sweep == "jacobi":
+        if use_interp and not _on_tpu():
+            from repro.solvers import jacobi
+
+            new, r = jacobi.jacobi_sweep_residual(st, ghosted6(x, halos), b)
+            return new, residual_partials(r, tile=tile, linf=linf)
+        return fused_sweep_residual_halo(x, halos, b, _coefs(st), tile=tile,
+                                         op="sweep", linf=linf,
+                                         interpret=use_interp)
+    if use_interp and not _on_tpu():
+        new, r = gauss_seidel.redblack_gs_sweep_residual(
+            st, ghosted6(x, halos), b, ox, oy, oz)
+        return new, residual_partials(r, tile=tile, linf=linf)
+    oxyz = (jnp.asarray(ox, jnp.int32) + jnp.asarray(oy, jnp.int32)
+            + jnp.asarray(oz, jnp.int32))
+    return fused_rbgs_sweep_residual_halo(x, halos, b, _coefs(st), oxyz,
+                                          tile=tile, linf=linf,
+                                          interpret=use_interp)
+
+
+def sweep_halo(st: Stencil, x: jax.Array, halos, b: jax.Array,
+               sweep: str = "jacobi", ox=0, oy=0, oz=0,
+               tile: Tuple[int, int] = (8, 128),
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Halo-buffer sweep-only entry (dead partials XLA eliminates)."""
+    PASS_COUNTS["sweep"] += 1
+    new, _ = _sweep_halo_impl(st, x, halos, b, sweep, ox, oy, oz, tile, True,
+                              interpret)
+    return new
+
+
+def sweep_with_contribution_halo(st: Stencil, x: jax.Array, halos,
+                                 b: jax.Array, sweep: str = "jacobi",
+                                 ox=0, oy=0, oz=0, ord: float = float("inf"),
+                                 tile: Tuple[int, int] = (8, 128),
+                                 interpret: Optional[bool] = None):
+    """Fused halo-buffer hot path: ``(new_block, contrib)`` in one pass."""
+    PASS_COUNTS["fused"] += 1
+    linf = np.isinf(ord)
+    new, parts = _sweep_halo_impl(st, x, halos, b, sweep, ox, oy, oz, tile,
+                                  linf, interpret)
+    return new, (jnp.max(parts) if linf else jnp.sum(parts))
+
+
+def residual_contribution_halo(st: Stencil, x: jax.Array, halos,
+                               b: jax.Array, ord: float = float("inf"),
+                               tile: Tuple[int, int] = (8, 128),
+                               interpret: Optional[bool] = None):
+    """Residual-only pass from an unghosted block + six face planes
+    (blocking mode's barrier pass and NFAIS2's exact verification)."""
+    PASS_COUNTS["residual"] += 1
+    linf = np.isinf(ord)
+    use_interp = (not _on_tpu()) if interpret is None else interpret
+    if use_interp and not _on_tpu():
+        from repro.solvers import jacobi
+        from repro.solvers.fixed_point import ghosted6
+
+        r = jacobi.residual_block(st, ghosted6(x, halos), b)
+        parts = residual_partials(r, tile=tile, linf=linf)
+    else:
+        _, parts = fused_sweep_residual_halo(x, halos, b, _coefs(st),
+                                             tile=tile, op="residual",
+                                             linf=linf, interpret=use_interp)
+    return jnp.max(parts) if linf else jnp.sum(parts)
 
 
 def residual_contribution(st: Stencil, g: jax.Array, b: jax.Array,

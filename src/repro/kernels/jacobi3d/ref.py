@@ -18,6 +18,30 @@ def residual_partials(r, tile: Tuple[int, int] = (8, 128), linf: bool = True):
     return jnp.sum((rt * rt).astype(jnp.float32), axis=(1, 3, 4))
 
 
+def ghosted6_ref(x, halos):
+    """(bx+2, by+2, bz+2) ghosted block from six face planes (the
+    halo-consuming kernels' window semantics, assembled whole)."""
+    gxm, gxp, gym, gyp, gzm, gzp = halos
+    bx, by, bz = x.shape
+    g = jnp.zeros((bx + 2, by + 2, bz + 2), x.dtype)
+    g = g.at[1:-1, 1:-1, 1:-1].set(x)
+    g = g.at[0, 1:-1, 1:-1].set(gxm)
+    g = g.at[-1, 1:-1, 1:-1].set(gxp)
+    g = g.at[1:-1, 0, 1:-1].set(gym)
+    g = g.at[1:-1, -1, 1:-1].set(gyp)
+    g = g.at[1:-1, 1:-1, 0].set(gzm)
+    g = g.at[1:-1, 1:-1, -1].set(gzp)
+    return g
+
+
+def fused_sweep_residual_halo_ref(x, halos, b, coefs,
+                                  tile: Tuple[int, int] = (8, 128),
+                                  op: str = "sweep", linf: bool = True):
+    """Oracle for ``fused_sweep_residual_halo`` (assemble-then-sweep)."""
+    return fused_sweep_residual_ref(ghosted6_ref(x, halos), b, coefs,
+                                    tile=tile, op=op, linf=linf)
+
+
 def fused_sweep_residual_ref(g, b, coefs, tile: Tuple[int, int] = (8, 128),
                              op: str = "sweep", linf: bool = True):
     diag, xm, xp, ym, yp, zm, zp = [coefs[i] for i in range(7)]

@@ -7,7 +7,7 @@ import; tests and benchmarks see the real (single) device.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -29,9 +29,24 @@ def make_host_mesh(model_axis: int = 1):
     return compat_make_mesh((data, model_axis), ("data", "model"))
 
 
-def make_shard_mesh(n_shards: Optional[int] = None, axis: str = "shard"):
-    """1-D mesh for the asynchronous shard runtime
-    (runtime/shard_runtime.py): one block owner per device along ``axis``.
+def shard_axis_names(axis: str, ndim: int) -> Tuple[str, ...]:
+    """Axis names of a shard mesh: the single historical ``axis`` for 1-D,
+    ``(axis_x, axis_y[, axis_z])`` for multi-axis meshes."""
+    if ndim == 1:
+        return (axis,)
+    return tuple(f"{axis}_{d}" for d in ("x", "y", "z")[:ndim])
+
+
+def make_shard_mesh(n_shards: Optional[Union[int, Tuple[int, ...]]] = None,
+                    axis: str = "shard"):
+    """Mesh for the asynchronous shard runtime (runtime/shard_runtime.py):
+    one block owner per device.
+
+    ``n_shards`` is an int (the historical 1-D pencil mesh along ``axis``)
+    or a mesh shape tuple ``(px,)``/``(px, py)``/``(px, py, pz)`` laying
+    ``prod(shape)`` devices row-major over axes ``shard_axis_names(axis,
+    ndim)`` — the shape ``ShardRuntimeConfig.mesh_shape`` declares and
+    ``solvers.partition.MeshPartition`` tiles the grid by.
 
     Unlike the production meshes this may use a *prefix* of the available
     devices (a 2-shard runtime on a 4-device host is a valid experiment),
@@ -39,15 +54,25 @@ def make_shard_mesh(n_shards: Optional[int] = None, axis: str = "shard"):
     ``make_mesh`` — which binds every device.
     """
     devices = jax.devices()
-    n = len(devices) if n_shards is None else int(n_shards)
-    if n < 1:
-        raise ValueError(f"n_shards={n} must be >= 1")
+    if n_shards is None:
+        shape: Tuple[int, ...] = (len(devices),)
+    elif isinstance(n_shards, (tuple, list)):
+        shape = tuple(int(s) for s in n_shards)
+        if not 1 <= len(shape) <= 3:
+            raise ValueError(f"mesh shape {shape} must be 1-D, 2-D, or 3-D")
+    else:
+        shape = (int(n_shards),)
+    if any(s < 1 for s in shape):
+        raise ValueError(f"n_shards={shape} must be >= 1 per axis")
+    n = int(np.prod(shape))
     if n > len(devices):
         raise ValueError(
-            f"n_shards={n} exceeds the {len(devices)} available devices "
-            "(set XLA_FLAGS=--xla_force_host_platform_device_count before "
-            "the first jax import to emulate more)")
-    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+            f"n_shards={shape} needs {n} devices, which exceeds the "
+            f"{len(devices)} available (set XLA_FLAGS=--xla_force_host_"
+            "platform_device_count before the first jax import to emulate "
+            "more)")
+    names = shard_axis_names(axis, len(shape))
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), names)
 
 
 def shard_axis_of(mesh) -> str:
@@ -55,6 +80,12 @@ def shard_axis_of(mesh) -> str:
     if len(mesh.axis_names) != 1:
         raise ValueError(f"expected a 1-D shard mesh, got axes {mesh.axis_names}")
     return mesh.axis_names[0]
+
+
+def shard_axes_of(mesh) -> Tuple[str, ...]:
+    """All shard axes of a (possibly multi-axis) shard-runtime mesh, in
+    grid-axis order."""
+    return tuple(mesh.axis_names)
 
 
 def dp_axes_of(mesh) -> Tuple[str, ...]:

@@ -65,6 +65,8 @@ class RuntimeConfig:
     trace_len: int = 0
     axis: str = "shard"
     sweep: str = "jacobi"            # convdiff only
+    mesh_shape: Optional[Tuple[int, ...]] = None  # convdiff only: (px[,py[,pz]])
+    overlap: bool = False            # convdiff only: comm-overlapped exchange
     num_batches: int = 1             # training only
     gamma: Optional[float] = None    # training only (None → safe_gamma)
     record_trace: bool = False       # attach a schema Trace to the report
@@ -87,7 +89,8 @@ class RuntimeConfig:
             monitor=self.monitor, reduction=self.reduction,
             inner_sweeps=self.inner_sweeps, halo_delay=self.halo_delay,
             contrib_lag=self.contrib_lag, max_outer=self.max_outer,
-            trace_len=self._trace_len(), sweep=self.sweep, axis=self.axis)
+            trace_len=self._trace_len(), sweep=self.sweep, axis=self.axis,
+            mesh_shape=self.mesh_shape, overlap=self.overlap)
 
     def to_train_config(self):
         """The equivalent ``TrainAsyncConfig`` (inner_sweeps→inner_steps,
@@ -151,13 +154,13 @@ def run_shard(family: str, cfg: RuntimeConfig, mesh, n: int, x0, arg, *,
     import jax
     from jax.sharding import NamedSharding
 
-    from repro.runtime.shard_runtime import make_runtime, state_spec
+    from repro.runtime.shard_runtime import make_runtime, mesh_state_spec
 
     scfg = cfg.to_shard_config()
-    axis = cfg.axis
-    p = mesh.shape[axis]
-    xspec = state_spec(family, axis)
-    aspec = _shard_arg_spec(family, axis)
+    axes = tuple(getattr(mesh, "axis_names", (cfg.axis,)))
+    p = int(np.prod([mesh.shape[a] for a in axes]))
+    xspec = mesh_state_spec(family, mesh)
+    aspec = _shard_arg_spec(family, mesh, cfg.axis)
     t0 = time.perf_counter()
     run = jax.jit(make_runtime(family, scfg, mesh, n,
                                stencil=stencil, damping=damping))
@@ -252,11 +255,13 @@ def run_elastic(family: str, cfg: RuntimeConfig, n: int, x0, arg, plan,
 # ---------------------------------------------------------------------------
 
 
-def _shard_arg_spec(family: str, axis: str):
+def _shard_arg_spec(family: str, mesh, axis: str):
     from jax.sharding import PartitionSpec as P
 
     if family == "convdiff":
-        return P(axis, None, None)
+        from repro.runtime.shard_runtime import mesh_state_spec
+
+        return mesh_state_spec(family, mesh)   # b shards exactly like x
     if family == "pagerank":
         return P(axis, None)
     from repro.runtime.shard_runtime import FAMILIES

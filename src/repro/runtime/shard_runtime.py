@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Callable, NamedTuple, Optional, Sequence, Union
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -57,10 +57,12 @@ from repro.core import detection
 from repro.core import residual as res
 from repro.core.compat import shard_map_compat as _shard_map
 from repro.core.reduction import REDUCTIONS, get_reduction
+from repro.kernels.jacobi3d import ops as jac_ops
 from repro.kernels.residual_norm import ops as rn_ops
 from repro.solvers import gauss_seidel, jacobi
 from repro.solvers.convdiff import Stencil
-from repro.solvers.fixed_point import _shift, ghosted
+from repro.solvers.fixed_point import _shift, ghosted, ghosted6
+from repro.solvers.partition import MeshPartition
 
 P = jax.sharding.PartitionSpec
 
@@ -69,11 +71,18 @@ P = jax.sharding.PartitionSpec
 # ``shard_runtime.REDUCTIONS`` keep working.
 
 
-def _per_shard(v: Union[int, Sequence[int]], p: int, name: str) -> np.ndarray:
+def _per_shard(v: Union[int, Sequence[int]], p: int, name: str,
+               mesh_shape: Optional[Tuple[int, ...]] = None) -> np.ndarray:
+    """Broadcast/validate a per-shard config field: a scalar broadcasts over
+    all ``p`` shards (row-major over the mesh axes); a sequence must match
+    the *total* shard count of the mesh, whatever its dimensionality."""
     arr = np.full(p, v, dtype=np.int32) if np.isscalar(v) else \
         np.asarray(v, dtype=np.int32)
     if arr.shape != (p,):
-        raise ValueError(f"{name} must be a scalar or length-{p}, got {arr.shape}")
+        where = (f" — mesh shape {tuple(mesh_shape)} has {p} shards total, "
+                 "row-major" if mesh_shape is not None else "")
+        raise ValueError(
+            f"{name} must be a scalar or length-{p}{where}, got {arr.shape}")
     if (arr < 0).any():
         raise ValueError(f"{name} must be >= 0, got {arr.tolist()}")
     return arr
@@ -93,11 +102,30 @@ class ShardRuntimeConfig:
     trace_len: int = 0               # >0: record the launched-residual series
     sweep: str = "jacobi"            # convdiff only: "jacobi" | "hybrid"
     axis: str = "shard"
+    mesh_shape: Optional[Tuple[int, ...]] = None  # (px[,py[,pz]]); None = 1-D
+    overlap: bool = False            # comm/compute-overlapped halo exchange
 
     def __post_init__(self):
         get_reduction(self.reduction)  # registry validation at construction
         if self.sweep not in ("jacobi", "hybrid"):
             raise ValueError(f"sweep {self.sweep!r} not in ('jacobi', 'hybrid')")
+        if self.mesh_shape is not None:
+            shape = tuple(int(s) for s in self.mesh_shape)
+            if not 1 <= len(shape) <= 3 or any(s < 1 for s in shape):
+                raise ValueError(
+                    f"mesh_shape {self.mesh_shape!r} must be a tuple of 1-3 "
+                    "positive ints (px,), (px, py) or (px, py, pz)")
+            object.__setattr__(self, "mesh_shape", shape)
+        if self.overlap:
+            if self.sweep != "jacobi":
+                raise ValueError(
+                    "overlap=True requires sweep='jacobi': the red-black "
+                    "ordering serializes face updates behind the colour "
+                    "pass, so there is no independent slab to ship early")
+            if self.reduction == "blocking":
+                raise ValueError(
+                    "overlap=True is incompatible with the blocking barrier "
+                    "reference (its exact pass already serializes the step)")
 
     def effective_monitor(self) -> detection.MonitorConfig:
         """Monitor as the runtime runs it: blocking consumes its reduction
@@ -127,6 +155,11 @@ class _ShardProblem(NamedTuple):
     sweep: Callable         # (x_block, ghosts) -> x_block'
     sweep_contrib: Callable  # (x_block, ghosts) -> (x_block', pre-σ contrib)
     exact_contrib: Callable  # (x_block, ghosts) -> pre-σ contrib of x_block
+    # comm-overlapped final step: (x, ghosts) -> (x', contrib, fresh ghosts).
+    # The fresh faces are recomputed as thin slabs *before* the full-block
+    # fused sweep, so the ppermute exchange is independent of it and XLA can
+    # run the collective while the interior sweeps (None: no overlap).
+    fused_step: Optional[Callable] = None
 
 
 # ---------------------------------------------------------------------------
@@ -206,23 +239,32 @@ def _butterfly_step(lane, partial, visible, k, p: int, axis: str, ord: float):
 
 
 def _make_loop(cfg: ShardRuntimeConfig, prob: _ShardProblem, p: int,
-               rank_fn: Callable[[], jax.Array]):
+               rank_fn: Callable[[], jax.Array],
+               axes: Optional[Tuple[str, ...]] = None,
+               mesh_shape: Optional[Tuple[int, ...]] = None):
     mon_cfg = cfg.effective_monitor()
     ord_ = mon_cfg.ord
-    inner = _per_shard(cfg.inner_sweeps, p, "inner_sweeps")
+    inner = _per_shard(cfg.inner_sweeps, p, "inner_sweeps", mesh_shape)
     if (inner < 1).any():
         raise ValueError("inner_sweeps must be >= 1 per shard")
-    delay = _per_shard(cfg.halo_delay, p, "halo_delay")
-    lag = _per_shard(cfg.contrib_lag, p, "contrib_lag")
+    delay = _per_shard(cfg.halo_delay, p, "halo_delay", mesh_shape)
+    lag = _per_shard(cfg.contrib_lag, p, "contrib_lag", mesh_shape)
     if cfg.reduction == "blocking" and (delay.any() or lag.any()):
         raise ValueError("blocking mode is the synchronous barrier reference: "
                          "halo_delay and contrib_lag must be 0")
     if cfg.reduction == "rdoubling":
         _butterfly_rounds(p)  # validate early, outside the traced body
     Lg = int(delay.max()) + 1
+    if prob.fused_step is not None:
+        # double-buffered halo ring: the exchange writes slot k+1 while the
+        # fused sweep still reads slot k-delay — distinct slots, so the
+        # collective never aliases the buffer the kernel is consuming
+        Lg = max(Lg, 2)
     Lc = int(lag.max()) + 1
     tlen = max(int(cfg.trace_len), 1)
-    axis = cfg.axis
+    # collectives take a single axis name (historical 1-D mesh) or the tuple
+    # of all shard axes (multi-axis mesh: reduce over the whole shard space)
+    axis = cfg.axis if axes is None else axes
 
     def loop(x0, *problem_args):
         rank = rank_fn()
@@ -240,11 +282,18 @@ def _make_loop(cfg: ShardRuntimeConfig, prob: _ShardProblem, p: int,
             if cfg.reduction == "blocking":
                 x = jax.lax.fori_loop(0, my_inner, plain, x)
                 contrib = None
+                fresh = prob.exchange(x)
+            elif prob.fused_step is not None:
+                # comm-overlapped step: thin face slabs are swept first and
+                # shipped, then the full block sweeps against the *landed*
+                # ghosts — the collective and the interior pass commute
+                x = jax.lax.fori_loop(0, my_inner - 1, plain, x)
+                x, contrib, fresh = prob.fused_step(x, ghosts, *problem_args)
             else:
                 x = jax.lax.fori_loop(0, my_inner - 1, plain, x)
                 x, contrib = prob.sweep_contrib(x, ghosts, *problem_args)
+                fresh = prob.exchange(x)
 
-            fresh = prob.exchange(x)
             gring = _ring_write(gring, fresh, k + 1)
             if contrib is None:
                 # barrier mode: detection pays a residual-only pass over the
@@ -303,26 +352,188 @@ def _make_loop(cfg: ShardRuntimeConfig, prob: _ShardProblem, p: int,
     return loop
 
 
-def _result_specs(cfg: ShardRuntimeConfig, x_spec) -> ShardRunResult:
+def _result_specs(cfg: ShardRuntimeConfig, x_spec,
+                  axes: Optional[Tuple[str, ...]] = None) -> ShardRunResult:
+    # local_sweeps is [p] with one entry per shard: on a multi-axis mesh the
+    # per-shard scalars concatenate row-major over the tuple of shard axes
+    sweeps_spec = P(cfg.axis) if axes is None else P(axes)
     return ShardRunResult(
         x=x_spec, residual=P(), outer_iters=P(), converged=P(),
-        local_sweeps=P(cfg.axis), verifications=P(), trace=P(),
+        local_sweeps=sweeps_spec, verifications=P(), trace=P(),
     )
 
 
 # ---------------------------------------------------------------------------
-# ConvDiff shards (1-D pencil decomposition along x, stale-halo exchange)
+# ConvDiff shards (1-D pencils or 2-D/3-D blocks, stale-halo exchange)
 # ---------------------------------------------------------------------------
+
+
+def _make_convdiff_mesh_runtime(cfg: ShardRuntimeConfig, mesh, stencil:
+                                Stencil, n: int):
+    """Multi-axis (or comm-overlapped) convdiff runtime.
+
+    The grid tiles by ``solvers.partition.MeshPartition`` over the mesh's
+    shard axes; each shard owns an ``n/px × n/py × n/pz`` block and
+    exchanges one face plane per partitioned direction per outer step
+    (faces on unpartitioned directions are the physical boundary, ghost
+    value 0).  Sweeps route through the halo-consuming jacobi3d entries
+    (``ops.sweep_halo``/``sweep_with_contribution_halo``) which keep the
+    single-HBM-pass fused sweep+residual, so ``core.detection`` and every
+    reduction consume the same free by-product as the 1-D path.
+
+    With ``cfg.overlap`` the final sweep of each outer step is the
+    comm-overlapped ``fused_step``: the *new* face values are recomputed
+    early as thickness-1 slabs (bitwise-identical to the faces the full
+    sweep produces — same inputs, same operation order), the ``ppermute``
+    is issued on those slabs against ring slot k+1, and the full fused
+    sweep+residual then runs against the landed slot k-delay ghosts with
+    no data dependence on the in-flight collective.
+    """
+    axes = tuple(mesh.axis_names)
+    shape = tuple(int(mesh.shape[a]) for a in axes)
+    part = MeshPartition(n, shape)
+    p = part.p
+    ndim = part.ndim
+    block = tuple(n // s for s in part.full_shape)   # (bx, by, bz)
+    parted = tuple(d for d in range(ndim) if shape[d] > 1)
+    plane = {0: (block[1], block[2]), 1: (block[0], block[2]),
+             2: (block[0], block[1])}
+    st = stencil
+    ord_ = cfg.monitor.ord
+    if cfg.overlap:
+        for d in parted:
+            if block[d] < 2:
+                raise ValueError(
+                    "overlap=True needs block extent >= 2 on every "
+                    f"partitioned axis: mesh {shape} at n={n} gives "
+                    f"block {block}")
+
+    def _face(x, d, last):
+        return jax.lax.index_in_dim(x, x.shape[d] - 1 if last else 0, d,
+                                    keepdims=False)
+
+    def _ship(faces):
+        """ppermute each partitioned direction's (minus, plus) face pair to
+        the respective neighbours; edge shards receive zeros (Dirichlet)."""
+        out = []
+        for d in parted:
+            fm, fp = faces[d]
+            gm = _shift(fp, axes[d], up=True, axis_size=shape[d])
+            gp = _shift(fm, axes[d], up=False, axis_size=shape[d])
+            out.append((gm, gp))
+        return tuple(out)
+
+    def exchange(x):
+        return _ship({d: (_face(x, d, False), _face(x, d, True))
+                      for d in parted})
+
+    def _halos6(x, faces):
+        """Six face planes for the halo-consuming sweeps: exchanged ghosts
+        on partitioned directions, zeros (physical BC) elsewhere."""
+        h, fi = [], 0
+        for d in range(3):
+            if d in parted:
+                gm, gp = faces[fi]
+                fi += 1
+            else:
+                gm = gp = jnp.zeros(plane[d], x.dtype)
+            h.extend((gm, gp))
+        return tuple(h)
+
+    def _offsets():
+        return tuple(
+            jax.lax.axis_index(axes[d]) * block[d] if d < ndim else 0
+            for d in range(3))
+
+    def sweep(x, faces, b):
+        h = _halos6(x, faces)
+        if cfg.sweep == "jacobi":
+            return jac_ops.sweep_halo(st, x, h, b)
+        ox, oy, oz = _offsets()
+        return jac_ops.sweep_halo(st, x, h, b, sweep="hybrid",
+                                  ox=ox, oy=oy, oz=oz)
+
+    def sweep_contrib(x, faces, b):
+        h = _halos6(x, faces)
+        ox, oy, oz = _offsets() if cfg.sweep == "hybrid" else (0, 0, 0)
+        return jac_ops.sweep_with_contribution_halo(
+            st, x, h, b, sweep=cfg.sweep, ox=ox, oy=oy, oz=oz, ord=ord_)
+
+    def exact_contrib(x, faces, b):
+        return jac_ops.residual_contribution_halo(st, x, _halos6(x, faces),
+                                                  b, ord=ord_)
+
+    def _face_sweep(x, h6, b, d, last):
+        """The new values of one face of the block, as the full Jacobi sweep
+        will produce them, from a thickness-1 slab: same stencil inputs in
+        the same operation order, so the result is bitwise-identical to the
+        corresponding face of ``sweep(x, ...)`` — cheap enough to compute
+        *before* the full sweep and hand to the exchange."""
+        idx = x.shape[d] - 1 if last else 0
+        slab = jax.lax.slice_in_dim(x, idx, idx + 1, axis=d)
+        b_slab = jax.lax.slice_in_dim(b, idx, idx + 1, axis=d)
+        sg = []
+        for e in range(3):
+            if e == d:
+                # along the face normal: one side is the landed ghost, the
+                # other the adjacent in-block plane (block extent >= 2)
+                gm = h6[2 * d] if not last else \
+                    jax.lax.index_in_dim(x, idx - 1, d, keepdims=False)
+                gp = jax.lax.index_in_dim(x, idx + 1, d, keepdims=False) \
+                    if not last else h6[2 * d + 1]
+            else:
+                # transverse: the block's e-ghost planes restricted to the
+                # slab's row (axis d sits at position d or d-1 of the plane)
+                pos = d if d < e else d - 1
+                gm = jax.lax.slice_in_dim(h6[2 * e], idx, idx + 1, axis=pos)
+                gp = jax.lax.slice_in_dim(h6[2 * e + 1], idx, idx + 1,
+                                          axis=pos)
+            sg.extend((gm, gp))
+        new_slab = jacobi.jacobi_sweep(st, ghosted6(slab, tuple(sg)), b_slab)
+        return jnp.squeeze(new_slab, axis=d)
+
+    def fused_step(x, faces, b):
+        h = _halos6(x, faces)
+        fresh = _ship({d: (_face_sweep(x, h, b, d, False),
+                           _face_sweep(x, h, b, d, True)) for d in parted})
+        new, contrib = jac_ops.sweep_with_contribution_halo(
+            st, x, h, b, sweep="jacobi", ord=ord_)
+        return new, contrib, fresh
+
+    def rank_fn():
+        r = jnp.zeros((), jnp.int32)
+        for d in range(ndim):
+            r = r * shape[d] + jax.lax.axis_index(axes[d])
+        return r
+
+    prob = _ShardProblem(exchange, sweep, sweep_contrib, exact_contrib,
+                         fused_step if cfg.overlap else None)
+    loop = _make_loop(cfg, prob, p, rank_fn, axes=axes, mesh_shape=shape)
+    spec = P(*axes, *([None] * (3 - ndim)))
+    return _shard_map(loop, mesh=mesh, in_specs=(spec, spec),
+                      out_specs=_result_specs(cfg, spec, axes=axes))
 
 
 def make_convdiff_runtime(cfg: ShardRuntimeConfig, mesh, stencil: Stencil,
                           n: int):
-    """Build ``run(x0, b) -> ShardRunResult`` over a 1-D shard mesh.
+    """Build ``run(x0, b) -> ShardRunResult`` over a shard mesh.
 
-    ``x0, b`` are global (n, n, n) arrays sharded ``P(axis, None, None)``;
-    each shard owns an x-pencil of ``n // p`` planes and exchanges its two
-    x-faces per outer step (y/z faces are the physical boundary).
+    ``x0, b`` are global (n, n, n) arrays sharded over the mesh's shard
+    axes.  On the historical 1-D mesh each shard owns an x-pencil of
+    ``n // p`` planes and exchanges its two x-faces per outer step (y/z
+    faces are the physical boundary); that path is kept byte-identical in
+    lowering (the HBM-exact CI gate pins it).  A multi-axis mesh — or
+    ``cfg.overlap`` — routes to the block-decomposed mesh runtime.
     """
+    axes = tuple(getattr(mesh, "axis_names", (cfg.axis,)))
+    if cfg.mesh_shape is not None:
+        mshape = tuple(int(mesh.shape[a]) for a in axes)
+        if cfg.mesh_shape != mshape:
+            raise ValueError(
+                f"cfg.mesh_shape {cfg.mesh_shape} does not match the mesh's "
+                f"shard axes {dict(zip(axes, mshape))}")
+    if len(axes) > 1 or cfg.overlap:
+        return _make_convdiff_mesh_runtime(cfg, mesh, stencil, n)
     axis = cfg.axis
     p = mesh.shape[axis]
     if n % p:
@@ -389,6 +600,13 @@ def make_pagerank_runtime(cfg: ShardRuntimeConfig, mesh, n: int,
     delays the *consumed* view, while a shard's own block is always
     current (the asynchronous-iterations convention).
     """
+    if len(getattr(mesh, "axis_names", (cfg.axis,))) != 1:
+        raise ValueError(
+            "pagerank shards are 1-D row blocks; got mesh axes "
+            f"{tuple(mesh.axis_names)} — multi-axis meshes are convdiff-only")
+    if cfg.overlap:
+        raise ValueError("overlap=True is convdiff-only (pagerank has no "
+                         "halo ring: its exchange is an all-gather)")
     axis = cfg.axis
     p = mesh.shape[axis]
     if n % p:
@@ -459,6 +677,19 @@ def state_spec(family: str, axis: str = "shard") -> P:
         return P(axis, None, None)
     if family == "pagerank":
         return P(axis)
+    raise KeyError(f"family {family!r} not in {FAMILIES}")
+
+
+def mesh_state_spec(family: str, mesh) -> P:
+    """PartitionSpec of the solution array on any shard mesh (1-D, 2-D or
+    3-D): one spec dim per shard axis, trailing dims replicated."""
+    axes = tuple(mesh.axis_names)
+    if family == "convdiff":
+        return P(*axes, *([None] * (3 - len(axes))))
+    if family == "pagerank":
+        if len(axes) != 1:
+            raise ValueError(f"pagerank shards are 1-D; got axes {axes}")
+        return P(axes[0])
     raise KeyError(f"family {family!r} not in {FAMILIES}")
 
 

@@ -164,15 +164,50 @@ def fit_cost_model(trace: Trace, hop_s: Optional[float] = None,
         elif reduction == "rdoubling" and p > 1:
             sync += hop_s
         sweep_s = max(step_s - sync, 1e-12) / max_inner
+    rho = _per_worker_rates(trace, p)
+    spw = None if rho is None else tuple(float(sweep_s) * rho)
     cost = CostModel(sweep_s=float(sweep_s), hop_s=float(hop_s),
-                     residual_pass_s=float(residual_pass_s), p_ref=p)
+                     residual_pass_s=float(residual_pass_s), p_ref=p,
+                     sweep_s_per_worker=spw)
     report = {
         "p_ref": p, "reduction": reduction, "wall_s": wall, "outer": outer,
         "sweep_s": cost.sweep_s, "hop_s": cost.hop_s,
         "residual_pass_s": cost.residual_pass_s,
+        "sweep_s_per_worker": (None if spw is None else list(spw)),
+        "worker_rate_ratio": (None if rho is None else list(rho)),
         "defaulted": defaults,
     }
     return cost, report
+
+
+def _per_worker_rates(trace: Trace, p: int) -> Optional[np.ndarray]:
+    """Relative per-worker sweep rates from the trace's sweep-event gaps.
+
+    For each worker the mean gap between its consecutive sweep events is
+    its empirical per-step cost; normalising by the cross-worker mean gives
+    unit-mean ratios ``ρ_w`` so ``sweep_s · ρ_w`` decomposes the fitted
+    aggregate cost per worker (``CostModel.sweep_s_per_worker``).  Returns
+    None when the trace carries no per-worker skew to fit — fewer than two
+    sweep events for some worker, or uniform gaps (device traces timestamp
+    all workers on one interpolated clock, so their skew is unresolvable
+    by construction and the scalar model is the honest one).
+    """
+    gaps = np.full(p, np.nan)
+    for w in range(p):
+        ts = np.asarray(sorted(
+            e["t"] for e in trace.events
+            if e["kind"] == "sweep" and e["w"] == w), dtype=np.float64)
+        if ts.size >= 2:
+            d = np.diff(ts)
+            d = d[d > 0]
+            if d.size:
+                gaps[w] = float(np.mean(d))
+    if not np.isfinite(gaps).all() or gaps.size == 0:
+        return None
+    rho = gaps / gaps.mean()
+    if np.allclose(rho, 1.0, rtol=1e-9, atol=1e-12):
+        return None
+    return rho
 
 
 def engine_config_from_fit(model, hop_latency: Optional[float] = None):

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -58,21 +58,45 @@ class CostModel:
     ``p_ref / p`` (each shard owns proportionally fewer cells).  ``hop_s``
     is one message hop; ``residual_pass_s`` the blocking mode's extra
     residual-only pass (detection work on the critical path).
+
+    ``sweep_s_per_worker`` (optional) carries heterogeneous per-worker
+    sweep costs at ``p_ref`` — fitted by ``sim.calibrate.fit_cost_model``
+    from per-worker sweep-event gaps when the trace resolves them (engine
+    traces; device traces interpolate uniformly and carry no skew).  Its
+    mean is ``sweep_s`` by construction, so scalar consumers are unchanged;
+    the virtual clock uses the per-worker vector whenever the replayed
+    shard count matches its length.
     """
 
     sweep_s: float
     hop_s: float
     residual_pass_s: float
     p_ref: int
+    sweep_s_per_worker: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self):
         if self.sweep_s < 0 or self.hop_s < 0 or self.residual_pass_s < 0:
             raise ValueError("cost-model constants must be >= 0")
         if self.p_ref < 1:
             raise ValueError(f"p_ref={self.p_ref} must be >= 1")
+        if self.sweep_s_per_worker is not None:
+            spw = tuple(float(v) for v in self.sweep_s_per_worker)
+            if not spw or any(v < 0 for v in spw):
+                raise ValueError("sweep_s_per_worker must be non-empty "
+                                 "with entries >= 0")
+            object.__setattr__(self, "sweep_s_per_worker", spw)
 
     def sweep_at(self, p: int) -> float:
         return self.sweep_s * self.p_ref / max(int(p), 1)
+
+    def sweep_vec_at(self, p: int) -> Optional[np.ndarray]:
+        """Per-worker sweep costs at shard count p, or None when the model
+        is uniform or the worker count no longer matches the fit."""
+        if self.sweep_s_per_worker is None or len(
+                self.sweep_s_per_worker) != int(p):
+            return None
+        return (np.asarray(self.sweep_s_per_worker, dtype=np.float64)
+                * self.p_ref / max(int(p), 1))
 
     def residual_pass_at(self, p: int) -> float:
         return self.residual_pass_s * self.p_ref / max(int(p), 1)
@@ -212,7 +236,8 @@ def predict_wall(steps: int, p: int, inner: np.ndarray, delay: np.ndarray,
     if steps <= 0:
         return 0.0
     hop = float(cost.hop_s if hop_s is None else hop_s)
-    sweep = cost.sweep_at(p)
+    sweep_vec = cost.sweep_vec_at(p)
+    sweep = sweep_vec if sweep_vec is not None else cost.sweep_at(p)
     comp = inner.astype(np.float64) * sweep * straggler.astype(np.float64)
     allreduce = 2.0 * math.ceil(math.log2(p)) * hop if p > 1 else 0.0
     R = max(p.bit_length() - 1, 1) if p > 1 else 1

@@ -101,6 +101,25 @@ def ghosted(x: jax.Array, ghosts) -> jax.Array:
     return g
 
 
+def ghosted6(x: jax.Array, ghosts) -> jax.Array:
+    """Assemble the (bx+2, by+2, bz+2) ghosted block from six face planes
+    ``(gxm, gxp, gym, gyp, gzm, gzp)`` — the multi-axis mesh runtime's
+    assembly, where any of x/y/z may be partitioned.  Unpartitioned or
+    boundary faces pass the zero Dirichlet plane; corners/edges stay zero
+    (the 7-point stencil never reads them)."""
+    gxm, gxp, gym, gyp, gzm, gzp = ghosts
+    bx, by, bz = x.shape
+    g = jnp.zeros((bx + 2, by + 2, bz + 2), x.dtype)
+    g = g.at[1:-1, 1:-1, 1:-1].set(x)
+    g = g.at[0, 1:-1, 1:-1].set(gxm)
+    g = g.at[-1, 1:-1, 1:-1].set(gxp)
+    g = g.at[1:-1, 0, 1:-1].set(gym)
+    g = g.at[1:-1, -1, 1:-1].set(gyp)
+    g = g.at[1:-1, 1:-1, 0].set(gzm)
+    g = g.at[1:-1, 1:-1, -1].set(gzp)
+    return g
+
+
 def _zero_ghosts(x: jax.Array):
     bx, by, bz = x.shape
     z = jnp.zeros

@@ -19,17 +19,18 @@ def parity_mask(shape, ox, oy, oz=0):
     return (ix + iy + iz) % 2
 
 
-def redblack_gs_sweep(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, ox, oy) -> jnp.ndarray:
+def redblack_gs_sweep(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, ox, oy, oz=0) -> jnp.ndarray:
     """One red-black GS sweep on a ghosted block; returns the new interior.
 
-    ``ox, oy`` are global offsets (static ints or traced scalars) aligning
-    the checkerboard across subdomains.  (The unused residual below is dead
+    ``ox, oy, oz`` are global offsets (static ints or traced scalars)
+    aligning the checkerboard across subdomains (``oz`` matters only on
+    z-partitioned meshes; the historical 2-D callers leave it 0).  (The unused residual below is dead
     code XLA eliminates — sweep-only callers pay nothing for the fusion.)"""
-    new, _ = redblack_gs_sweep_residual(st, g, b, ox, oy)
+    new, _ = redblack_gs_sweep_residual(st, g, b, ox, oy, oz)
     return new
 
 
-def redblack_gs_sweep_residual(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, ox, oy):
+def redblack_gs_sweep_residual(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, ox, oy, oz=0):
     """Fused hybrid sweep + pre-sweep residual.
 
     The first color's off-diagonal apply doubles as the residual term, so
@@ -38,7 +39,7 @@ def redblack_gs_sweep_residual(st: Stencil, g: jnp.ndarray, b: jnp.ndarray, ox, 
     (residual of the *input* state — one sweep staler than a post-sweep
     evaluation, which the asynchronous detection layer tolerates by design).
     """
-    parity = parity_mask(b.shape, ox, oy)
+    parity = parity_mask(b.shape, ox, oy, oz)
     inner = g[1:-1, 1:-1, 1:-1]
     off0 = offdiag_apply(st, g)
     r = b - (st.diag * inner + off0)

@@ -1,14 +1,26 @@
 """Domain decomposition for the paper's convection–diffusion experiment.
 
-The cubic domain is partitioned into a ``px × py`` grid in the (x, y)-plane;
-each subdomain keeps the whole z-interval (paper §4.1).  Workers are numbered
-row-major; neighbours are the 4-neighbourhood in the (x, y) process grid.
+Two partitioners live here:
+
+* ``GridPartition`` — the paper's fixed ``px × py`` (x, y)-plane grid with
+  the whole z-interval local (§4.1); kept verbatim for the event-sim and
+  bench drivers that predate pluggable meshes.
+* ``MeshPartition`` — the pluggable 1-D/2-D/3-D shard-mesh contract the
+  device runtime consumes (Hydra-style: a partition yields per-shard block
+  specs, face-neighbour topology, and the double-buffer space the stale
+  halo ring needs).  ``launch.mesh.make_shard_mesh`` builds the matching
+  device mesh from ``MeshPartition.shape``;
+  ``runtime.shard_runtime.make_convdiff_runtime`` consumes blocks, faces,
+  and offsets.
+
+Workers are numbered row-major; neighbours are the face adjacency of the
+process grid (the 7-point stencil exchanges faces only — no edges/corners).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 
 def process_grid(p: int) -> Tuple[int, int]:
@@ -76,3 +88,136 @@ class GridPartition:
         cx, cy = self.coords(i)
         bx, by, _ = self.block
         return (cx * bx, cy * by)
+
+
+# ---------------------------------------------------------------------------
+# Pluggable 1-D/2-D/3-D shard-mesh partitioner (device-runtime contract)
+# ---------------------------------------------------------------------------
+
+#: face labels per grid axis, (minus, plus) — the exchange/event vocabulary
+FACES = (("x-", "x+"), ("y-", "y+"), ("z-", "z+"))
+
+
+@dataclass(frozen=True)
+class MeshPartition:
+    """Partition of an ``n × n × n`` grid over a 1-D/2-D/3-D process mesh.
+
+    ``shape`` is ``(px,)``, ``(px, py)``, or ``(px, py, pz)``: grid axis d
+    is split into ``shape[d]`` equal slabs; axes beyond ``len(shape)`` stay
+    whole (a 1-D partition is the runtime's historical x-pencil).  This is
+    the partitioner contract the shard runtime builds against: per-shard
+    block specs (``block``/``block_spec``), face-neighbour topology
+    (``neighbors``/``face``), and the double-buffer space of the stale halo
+    ring (``face_shapes``/``ring_slots``/``buffer_elems``).
+    """
+
+    n: int
+    shape: Tuple[int, ...]
+
+    def __post_init__(self):
+        shape = tuple(int(s) for s in self.shape)
+        object.__setattr__(self, "shape", shape)
+        if not 1 <= len(shape) <= 3:
+            raise ValueError(f"mesh shape {shape} must be 1-D, 2-D, or 3-D")
+        if any(s < 1 for s in shape):
+            raise ValueError(f"mesh shape {shape} must be >= 1 per axis")
+        for s in shape:
+            if self.n % s:
+                raise ValueError(
+                    f"n={self.n} not divisible by mesh shape {shape}")
+
+    # -- basic facts --------------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def p(self) -> int:
+        return int(math.prod(self.shape))
+
+    @property
+    def full_shape(self) -> Tuple[int, int, int]:
+        """``shape`` padded with trailing 1s to the three grid axes."""
+        return tuple(self.shape) + (1,) * (3 - self.ndim)
+
+    @property
+    def block(self) -> Tuple[int, int, int]:
+        return tuple(self.n // s for s in self.full_shape)
+
+    def block_spec(self, i: int) -> Tuple[Tuple[int, int], ...]:
+        """Per-axis ``(offset, extent)`` of shard i's block (the Hydra-style
+        per-shard task spec)."""
+        off = self.offsets(i)
+        return tuple(zip(off, self.block))
+
+    # -- rank <-> coords (row-major, matching the device-mesh layout) -------
+    def coords(self, i: int) -> Tuple[int, ...]:
+        if not 0 <= i < self.p:
+            raise ValueError(f"rank {i} out of range for p={self.p}")
+        out = []
+        for s in reversed(self.shape):
+            i, c = divmod(i, s)
+            out.append(c)
+        return tuple(reversed(out))
+
+    def rank(self, *coords: int) -> int:
+        if len(coords) != self.ndim:
+            raise ValueError(f"expected {self.ndim} coords, got {coords}")
+        r = 0
+        for c, s in zip(coords, self.shape):
+            if not 0 <= c < s:
+                raise ValueError(f"coords {coords} out of mesh {self.shape}")
+            r = r * s + c
+        return r
+
+    def offsets(self, i: int) -> Tuple[int, int, int]:
+        c = self.coords(i) + (0,) * (3 - self.ndim)
+        return tuple(cd * bd for cd, bd in zip(c, self.block))
+
+    # -- face-neighbour topology --------------------------------------------
+    def neighbors(self, i: int) -> List[int]:
+        c = self.coords(i)
+        out = []
+        for d in range(self.ndim):
+            for step in (-1, +1):
+                cd = c[d] + step
+                if 0 <= cd < self.shape[d]:
+                    out.append(self.rank(*(c[:d] + (cd,) + c[d + 1:])))
+        return out
+
+    def face(self, i: int, j: int) -> str:
+        """Which face of shard i touches neighbour j (``FACES`` labels)."""
+        ci, cj = self.coords(i), self.coords(j)
+        diff = [b - a for a, b in zip(ci, cj)]
+        for d, dd in enumerate(diff):
+            if dd in (-1, +1) and all(o == 0 for k, o in enumerate(diff)
+                                      if k != d):
+                return FACES[d][0 if dd == -1 else 1]
+        raise ValueError(f"{j} is not a face neighbour of {i}")
+
+    # -- double-buffer space (the stale halo ring) ---------------------------
+    def face_shapes(self) -> Dict[str, Tuple[int, int]]:
+        """Shape of each exchanged face plane, keyed by ``FACES`` label.
+        Every mesh axis exchanges both its faces (size-1 axes receive the
+        zero Dirichlet plane from the empty permutation — same buffers)."""
+        bx, by, bz = self.block
+        plane = {0: (by, bz), 1: (bx, bz), 2: (bx, by)}
+        out = {}
+        for d in range(self.ndim):
+            for label in FACES[d]:
+                out[label] = plane[d]
+        return out
+
+    def ring_slots(self, max_delay: int) -> int:
+        """Ring length the stale-halo buffer needs: the consuming shard
+        reads the view from ``delay`` exchanges ago while the exchange of
+        step k+1 lands — ``max_delay + 1`` slots, double-buffered minimum 2
+        when the runtime overlaps the exchange behind the interior sweep."""
+        if max_delay < 0:
+            raise ValueError(f"max_delay={max_delay} must be >= 0")
+        return max(int(max_delay) + 1, 2)
+
+    def buffer_elems(self, max_delay: int = 0) -> int:
+        """Total per-shard halo double-buffer space, in elements."""
+        slots = self.ring_slots(max_delay)
+        return slots * sum(a * b for a, b in self.face_shapes().values())

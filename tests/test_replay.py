@@ -283,6 +283,86 @@ def test_fit_cost_model_inverts_predict_wall():
         assert fit.hop_s == pytest.approx(cost0.hop_s, rel=0.02)
 
 
+def _skewed_engine_trace(p=4, steps=40, base=1e-3, skew=0.5, wall_s=None):
+    """An engine-style trace whose per-worker sweep timestamps carry real
+    skew: worker w's gap is ``base * (1 + skew * w / (p - 1))``."""
+    gaps = base * (1.0 + skew * np.arange(p) / max(p - 1, 1))
+    wall = float(wall_s if wall_s is not None else steps * gaps.max())
+    tr = Trace("engine", p, {
+        "reduction": "nonblocking", "topology": "flat",
+        "monitor": {"mode": "pfait", "eps": 1e-4, "eps_tilde": 1e-4,
+                    "staleness": 2, "persistence": 4, "ord": 2.0,
+                    "check_every": 1},
+        "inner_sweeps": [1] * p, "halo_delay": [0] * p,
+        "contrib_lag": [0] * p, "wall_s": wall, "outer_iters": steps,
+    })
+    for k in range(steps):
+        for w in range(p):
+            tr.add("sweep", float((k + 1) * gaps[w]), w=w, step=k, inner=1)
+        tr.add("reduce", float((k + 1) * gaps.max()), step=k,
+               residual=0.9 ** k)
+    return tr, gaps
+
+
+def test_fit_cost_model_per_worker_rates_from_skewed_trace():
+    """Engine traces with real per-worker timestamps resolve the skew: the
+    fitted per-worker vector is sweep_s scaled by each worker's unit-mean
+    gap ratio, and its mean stays the scalar sweep_s."""
+    p = 4
+    tr, gaps = _skewed_engine_trace(p=p)
+    cost, report = fit_cost_model(tr)
+    assert cost.sweep_s_per_worker is not None
+    spw = np.asarray(cost.sweep_s_per_worker)
+    rho = gaps / gaps.mean()
+    np.testing.assert_allclose(spw, cost.sweep_s * rho, rtol=1e-9)
+    assert np.mean(spw) == pytest.approx(cost.sweep_s, rel=1e-9)
+    np.testing.assert_allclose(report["worker_rate_ratio"], rho, rtol=1e-9)
+    assert report["sweep_s_per_worker"] == pytest.approx(list(spw))
+
+
+def test_fit_cost_model_uniform_trace_keeps_scalar_model():
+    # no sweep events at all (reduce-only synthetic trace) -> scalar
+    tr = _synthetic_trace()
+    cost, report = fit_cost_model(tr)
+    assert cost.sweep_s_per_worker is None
+    assert report["worker_rate_ratio"] is None
+    # device-style uniform interpolation (identical gaps per worker) is
+    # unresolvable skew by construction -> scalar too
+    tr2, _ = _skewed_engine_trace(skew=0.0)
+    cost2, _ = fit_cost_model(tr2)
+    assert cost2.sweep_s_per_worker is None
+
+
+def test_cost_model_sweep_vec_scales_and_gates_on_p():
+    cost = CostModel(sweep_s=2e-3, hop_s=1e-4, residual_pass_s=2e-3,
+                     p_ref=4, sweep_s_per_worker=(1e-3, 2e-3, 3e-3, 2e-3))
+    vec = cost.sweep_vec_at(4)
+    np.testing.assert_allclose(vec, [1e-3, 2e-3, 3e-3, 2e-3])
+    # halving the per-shard work at p=8... but the fit no longer matches
+    # the worker count, so the vector gates off and scalar scaling applies
+    assert cost.sweep_vec_at(8) is None
+    assert cost.sweep_at(8) == pytest.approx(1e-3)
+    with pytest.raises(ValueError, match="sweep_s_per_worker"):
+        CostModel(sweep_s=1e-3, hop_s=1e-4, residual_pass_s=1e-3, p_ref=2,
+                  sweep_s_per_worker=(1e-3, -1e-3))
+
+
+def test_predict_wall_consumes_per_worker_vector():
+    """With halo deps pushed out of reach (huge delay), the virtual clock
+    is exactly steps x the slowest worker's sweep cost."""
+    p, steps = 2, 10
+    cost = CostModel(sweep_s=2e-3, hop_s=0.0, residual_pass_s=0.0, p_ref=p,
+                     sweep_s_per_worker=(1e-3, 3e-3))
+    wall = predict_wall(steps, p, np.ones(p), np.full(p, 10 * steps),
+                        np.ones(p), cost, "flat-nonblocking")
+    assert wall == pytest.approx(steps * 3e-3)
+    # scalar model on the same inputs: every worker pays the mean cost
+    scalar = CostModel(sweep_s=2e-3, hop_s=0.0, residual_pass_s=0.0, p_ref=p)
+    wall_s = predict_wall(steps, p, np.ones(p), np.full(p, 10 * steps),
+                          np.ones(p), scalar, "flat-nonblocking")
+    assert wall_s == pytest.approx(steps * 2e-3)
+
+
 def test_fit_cost_model_needs_a_wall():
     tr = _synthetic_trace()
     tr.meta["wall_s"] = 0.0
