@@ -60,6 +60,7 @@ FINGERPRINT_PATHS: Tuple[str, ...] = (
     "benchmarks/bench_elastic.py",
     "benchmarks/bench_ml.py",
     "benchmarks/bench_replay.py",
+    "benchmarks/bench_serve.py",
 )
 
 

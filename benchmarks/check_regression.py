@@ -75,6 +75,18 @@ Metrics and tolerances (the CI contract):
   - calibration fit structure (``dist``, ``n``) — exact; the KS statistic
     itself is measurement noise and is not gated.
 
+* ``serve_smoke`` (BENCH_serve_smoke.json):
+  - load-cell counters ``served`` / ``rejected`` / ``shed`` / ``timeouts``
+    / ``false_detections`` / ``compile_count`` / ``warm_hits`` / ``ticks``
+    — exact: the detection service is deterministic in the tick domain for
+    a seeded Poisson schedule, and a drifting compile count means the
+    warm-executable signature sharing broke,
+  - nearest-rank latency percentiles (``ttd_ticks`` p50/p95/p99,
+    ``queue_wait_ticks`` p50/p95) and ``detect_steps_sum`` — exact: ticks
+    and detection steps are device-program outputs under the pinned jax
+    version; wall seconds / tenants-per-second are reported, never gated,
+  - same contract per rate-sweep row, keyed by arrival rate.
+
 Usage:
   python benchmarks/check_regression.py fused_smoke \
       --baseline benchmarks/baselines/BENCH_fused_smoke.json \
@@ -427,8 +439,37 @@ def _replay_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
     yield ("calibration.fit.n", float(bfit["n"]), float(ffit["n"]), "exact", 0.0)
 
 
+def _serve_row(prefix: str, brow: Dict, frow: Dict) -> Iterator[Check]:
+    for counter in ("served", "rejected", "shed", "timeouts",
+                    "false_detections", "compile_count", "warm_hits",
+                    "ticks", "detect_steps_sum", "steps_sum"):
+        yield (f"{prefix}.{counter}", float(brow[counter]),
+               float(frow[counter]), "exact", 0.0)
+    for dist, quantiles in (("ttd_ticks", ("p50", "p95", "p99")),
+                            ("queue_wait_ticks", ("p50", "p95"))):
+        for q in quantiles:
+            yield (f"{prefix}.{dist}.{q}",
+                   float(brow[dist].get(q, -1.0)),
+                   float(frow[dist].get(q, -1.0)), "exact", 0.0)
+
+
+def _serve_smoke(base: Dict, fresh: Dict) -> Iterator[Check]:
+    # tick-domain service metrics are deterministic for a seeded schedule
+    # under the pinned jax version — everything gates exact; wall seconds
+    # and tenants-per-second are shared-runner noise, reported never gated
+    yield from _serve_row("load", base["load"], fresh["load"])
+    fresh_rows = {r["rate"]: r for r in fresh["sweep"]}
+    for brow in sorted(base["sweep"], key=lambda r: r["rate"]):
+        yield from _serve_row(f"sweep.rate{brow['rate']:g}",
+                              brow, fresh_rows[brow["rate"]])
+    yield ("knee.knee_rate",
+           float(base["knee"]["knee_rate"] or -1),
+           float(fresh["knee"]["knee_rate"] or -1), "exact", 0.0)
+
+
 BENCHES = {
     "fused_smoke": _fused_smoke,
+    "serve_smoke": _serve_smoke,
     "reliability_smoke": _reliability_smoke,
     "shard_smoke": _shard_smoke,
     "mesh_smoke": _mesh_smoke,
@@ -439,6 +480,7 @@ BENCHES = {
 
 
 def run_checks(bench: str, base: Dict, fresh: Dict) -> int:
+    """Evaluate one bench's checks; print verdicts, return failure count."""
     failures = 0
     for name, b, f, mode, tol in BENCHES[bench](base, fresh):
         if mode == "exact":
@@ -460,6 +502,7 @@ def run_checks(bench: str, base: Dict, fresh: Dict) -> int:
 
 
 def main() -> None:
+    """CLI: gate a fresh smoke report against its committed baseline."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("bench", choices=sorted(BENCHES))
     ap.add_argument("--baseline", required=True)

@@ -50,6 +50,7 @@ def make_problem(family: str, seed: int = 0, **kw):
 
 
 def make_protocol(name: str, eps: float, ord_: float, m: int = 4):
+    """Event-sim termination protocol factory (paper protocol names)."""
     if name == "pfait":
         return PFAIT(eps, ord=ord_)
     if name == "nfais2":
@@ -66,6 +67,7 @@ def make_protocol(name: str, eps: float, ord_: float, m: int = 4):
 def run_cell(protocol: str, eps: float, n: int, p: int, rho: float = 0.93,
              seeds=SEEDS, max_iters: int = 60_000, platform=stable_platform,
              fused: bool = True) -> Dict:
+    """One seeded-mean paper-table cell on the event simulator."""
     rs, wts, kmaxs, iters, wall = [], [], [], 0, 0.0
     for seed in seeds:
         prob = ConvDiffProblem(n=n, p=p, rho=rho, seed=seed)
@@ -104,6 +106,7 @@ def run_cell(protocol: str, eps: float, n: int, p: int, rho: float = 0.93,
 
 
 def print_rows(title: str, rows: List[Dict]) -> None:
+    """Pretty-print one benchmark table to stdout."""
     print(f"\n## {title}")
     print(f"{'proto':8s} {'eps':>8s} {'p':>4s} {'min r*':>10s} {'max r*':>10s} "
           f"{'wtime':>8s} {'k_max':>8s}")
@@ -114,6 +117,7 @@ def print_rows(title: str, rows: List[Dict]) -> None:
 
 
 def csv_rows(table: str, rows: List[Dict]) -> List[str]:
+    """Rows in the repo-wide BENCH CSV convention (name,us,derived)."""
     out = []
     for r in rows:
         us = r["wall_s"] / len(SEEDS) * 1e6
@@ -137,6 +141,15 @@ def csv_rows(table: str, rows: List[Dict]) -> List[str]:
 
 @dataclass(frozen=True)
 class CellKind:
+    """One registered campaign cell kind (see ``cell_kind``).
+
+    ``fn`` executes a spec's kwargs and returns a JSON-able row;
+    ``cache=False`` marks timing cells the campaign always re-measures;
+    ``env`` names the library versions the result is sensitive to (part of
+    the content-addressed cache key); ``cost`` is an optional spec → weight
+    hint for the campaign's LPT scheduler.
+    """
+
     fn: Callable[..., Dict]
     cache: bool = True            # False: timing cells, always re-measured
     env: Tuple[str, ...] = ()     # extra cache-key context ("jax", "numpy")
@@ -151,6 +164,7 @@ def cell_kind(name: str, *, cache: bool = True, env: Tuple[str, ...] = (),
     """Register a campaign cell kind (decorator)."""
 
     def register(fn: Callable[..., Dict]) -> Callable[..., Dict]:
+        """Record the kind function in ``CELL_KINDS`` under ``name``."""
         CELL_KINDS[name] = CellKind(fn=fn, cache=cache, env=env, cost=cost)
         return fn
 
@@ -158,6 +172,7 @@ def cell_kind(name: str, *, cache: bool = True, env: Tuple[str, ...] = (),
 
 
 def run_cell_spec(spec: Dict) -> Dict:
+    """Execute one campaign cell spec via its registered kind."""
     kind = CELL_KINDS[spec["kind"]]
     return kind.fn(**{k: v for k, v in spec.items() if k != "kind"})
 
@@ -178,6 +193,7 @@ def spec_env(spec: Dict) -> Dict[str, str]:
 
 
 def spec_cost(spec: Dict) -> float:
+    """LPT scheduling weight of a spec (1.0 when the kind declares none)."""
     cost = CELL_KINDS[spec["kind"]].cost
     return float(cost(spec)) if cost is not None else 1.0
 
@@ -193,6 +209,7 @@ _PROBLEM_CACHE = threading.local()
 
 
 def make_problem_cached(family: str, seed: int = 0, **kw):
+    """Thread-local memoised ``make_problem`` (see cache note above)."""
     cache = getattr(_PROBLEM_CACHE, "probs", None)
     if cache is None:
         cache = _PROBLEM_CACHE.probs = {}
@@ -331,38 +348,21 @@ def _cell_detection_grid(family: str, mode: str, seeds, T: int,
              for s in seeds]
     p0 = probs[0]
     use_ord = float(ord) if ord is not None else float(p0.ord)
-    if family == "convdiff":
-        n = problem["n"]
-        x0 = jnp.zeros((len(probs), n, n, n), jnp.float32)
-        b = jnp.asarray(np.stack([pr.b_global for pr in probs]),
-                        dtype=jnp.float32)
-        def step_fn(X, b=b):
-            return p0.update_with_residual_batched(X, b=b)
-    elif family == "pagerank":
-        n = problem["n"]
-        x0 = jnp.full((len(probs), n), 1.0 / n, jnp.float32)
-        P = jnp.asarray(np.stack([pr.to_dense() for pr in probs]),
-                        dtype=jnp.float32)
-        def step_fn(X, P=P):
-            return p0.update_with_residual_batched(X, P=P)
-    elif family == "mlfixed":
-        n = problem["n"]
-        x0 = jnp.zeros((len(probs), n), jnp.float32)
-        gam = jnp.asarray([pr.gamma for pr in probs], jnp.float32)
-        if p0.task == "lstsq":
-            H = jnp.asarray(np.stack([pr.H for pr in probs]), jnp.float32)
-            c = jnp.asarray(np.stack([pr.c for pr in probs]), jnp.float32)
-            def step_fn(X, H=H, c=c, gam=gam):
-                return p0.update_with_residual_batched(X, H=H, c=c,
-                                                       gamma=gam)
-        else:
-            A = jnp.asarray(np.stack([pr.A for pr in probs]), jnp.float32)
-            s = jnp.asarray(np.stack([pr.s for pr in probs]), jnp.float32)
-            def step_fn(X, A=A, s=s, gam=gam):
-                return p0.update_with_residual_batched(X, A=A, s=s,
-                                                       gamma=gam)
-    else:
-        raise KeyError(family)
+    # generic seed-batched lane assembly (solvers' lane_x0/lane_operands):
+    # x0 is seed-independent canonical state, operands carry the per-seed
+    # data — the same convention the detection service packs lanes with
+    # (launch/serve.py), so this cell and the server share one device path
+    x0 = jnp.asarray(np.stack([pr.lane_x0() for pr in probs]), jnp.float32)
+    ops = {
+        k: jnp.asarray(
+            np.stack([np.asarray(pr.lane_operands()[k]) for pr in probs]),
+            jnp.float32)
+        for k in p0.lane_operands()
+    }
+
+    def step_fn(X, ops=ops):
+        return p0.update_with_residual_batched(X, **ops)
+
     series = detection.contribution_series(step_fn, x0, T)
     v = detection.batched_monitor(
         mode, series, eps_grid, staleness_grid, persistence_grid,
@@ -563,3 +563,18 @@ def _cell_ml_train(**kw) -> Dict:
     from benchmarks.bench_ml import ml_train
 
     return ml_train(**kw)
+
+
+# -- detection-service cells (benchmarks/bench_serve.py) ---------------------
+
+
+@cell_kind("serve_load", env=("jax", "numpy"),
+           cost=lambda s: s.get("tenants", 64) * 120.0)
+def _cell_serve_load(**kw) -> Dict:
+    """One open-loop Poisson load campaign against the multi-tenant
+    detection service (``launch/serve.py``): deterministic tick-domain
+    latency percentiles, warm-executable reuse counters, and oracle-scored
+    false detections."""
+    from benchmarks.bench_serve import serve_load
+
+    return serve_load(**kw)

@@ -47,6 +47,17 @@ MODES = ("sync", "pfait", "nfais2", "nfais5")
 
 @dataclass(frozen=True)
 class MonitorConfig:
+    """Static configuration of one convergence monitor.
+
+    ``mode`` selects the detection protocol (``MODES``); ``eps`` is the
+    already-tightened detection threshold ε (for PFAIT, ε̃/margin — see
+    ``for_mode``); ``eps_tilde`` the user-facing target precision ε̃;
+    ``staleness`` the reduction pipeline depth K (checks see a value K
+    steps old — 0 means blocking); ``persistence`` the NFAIS repeat count
+    m; ``ord`` the residual norm order l (σ applies the matching root to
+    the reduced contribution sum); ``check_every`` the reduction cadence.
+    """
+
     mode: str = "pfait"
     eps: float = 1e-6            # detection threshold ε (already tightened)
     eps_tilde: float = 1e-6      # desired precision ε̃ (NFAIS2 verifies this)
@@ -63,6 +74,7 @@ class MonitorConfig:
 
     @property
     def ring_len(self) -> int:
+        """Staleness ring depth: K in-flight reductions + the visible slot."""
         return self.staleness + 1
 
 
@@ -80,6 +92,7 @@ class MonitorState(NamedTuple):
 
 
 def init_state(cfg: MonitorConfig) -> MonitorState:
+    """Fresh monitor state: ring primed to +inf (nothing visible yet)."""
     return MonitorState(
         ring=jnp.full((cfg.ring_len,), jnp.inf, dtype=jnp.float32),
         step=jnp.zeros((), jnp.int32),
@@ -154,6 +167,7 @@ def step(
         fire = candidate & ~state.converged
 
         def verify(_):
+            """NFAIS2 verification: exact residual if a verifier exists."""
             if exact_residual_fn is None:
                 # No verifier supplied: fall back to the stale value (the
                 # caller accepts NFAIS5-like semantics).
@@ -196,6 +210,7 @@ def step(
 
 
 def should_stop(state: MonitorState) -> jax.Array:
+    """Loop predicate: True once the monitor has certified detection."""
     return state.converged
 
 
@@ -413,6 +428,131 @@ def batched_monitor(mode: str, contribs, eps, staleness, persistence,
     )
 
 
+# ---------------------------------------------------------------------------
+# Lane lifecycle — pack / retire / refill without recompiling
+# ---------------------------------------------------------------------------
+#
+# ``batched_monitor`` assumes every lane starts at step 0 and runs the same
+# T checks — fine for parameter studies, wrong for a *service* where tenants
+# arrive continuously and converge at different steps.  The lane-lifecycle
+# API below exposes the same per-lane update (``_lane_step``) as a resident
+# state that a server advances chunk by chunk:
+#
+# * ``init_lanes``        — fresh [L]-shaped lane states (ring padded to the
+#   service's max K+1; padding slots are never read, so per-lane verdicts
+#   stay bitwise-identical to a solo ``batched_monitor`` run),
+# * ``reset_lanes``       — re-initialise a masked subset of lanes (retire a
+#   converged tenant, admit the next one) with pure ``where`` ops: shapes
+#   never change, so the compiled executable is reused as-is,
+# * ``make_lane_runner``  — fuse a batched problem step with the monitor
+#   update into one jitted chunk program ``(X, ops, state, ε, ε̃, K, m) →
+#   (X', state', contribs[L, chunk])``.  Compiling this ONCE per
+#   (family, shape-bucket, mode) signature is what makes a multi-tenant
+#   detection service pay compilation per *signature*, not per tenant
+#   (``launch/serve.py``).
+
+
+#: public alias — the per-lane monitor state carried by the lane runner
+LaneState = _LaneState
+
+
+def init_lanes(nlanes: int, ring_len: int) -> _LaneState:
+    """Fresh monitor state for ``nlanes`` independent detection lanes.
+
+    ``ring_len`` must be ≥ the largest per-lane ``K + 1`` the lanes will
+    ever be configured with; oversizing it only pads (padding slots are
+    never read — see ``batched_monitor``'s bitwise-parity note).
+    """
+    if nlanes < 1 or ring_len < 1:
+        raise ValueError(f"need nlanes>=1, ring_len>=1, got {nlanes}/{ring_len}")
+    zero_i = jnp.zeros((nlanes,), jnp.int32)
+    return _LaneState(
+        ring=jnp.full((nlanes, ring_len), jnp.inf, jnp.float32),
+        step=zero_i,
+        persist=zero_i,
+        phase=zero_i,
+        confirm_at=jnp.full((nlanes,), jnp.iinfo(jnp.int32).max, jnp.int32),
+        converged=jnp.zeros((nlanes,), jnp.bool_),
+        detected=jnp.full((nlanes,), jnp.inf, jnp.float32),
+        verifications=zero_i,
+        detect_step=jnp.full((nlanes,), -1, jnp.int32),
+    )
+
+
+def lane_step_batched(mode: str, state: _LaneState, g: jax.Array,
+                      eps: jax.Array, eps_tilde: jax.Array,
+                      K: jax.Array, m: jax.Array) -> _LaneState:
+    """One monitor check on every lane: ``_lane_step`` vmapped over [L].
+
+    ``g`` — per-lane σ-applied global residual ([L], f32); the parameter
+    arrays are per-lane (traced, so mixed-ε/K/m lanes share one program).
+    """
+    return jax.vmap(partial(_lane_step, mode))(state, g, eps, eps_tilde, K, m)
+
+
+def reset_lanes(state: _LaneState, mask: jax.Array) -> _LaneState:
+    """Re-initialise the lanes where ``mask`` is True (retire + refill).
+
+    Pure ``where`` ops on every field — shapes are unchanged, so a jitted
+    caller never recompiles; untouched lanes carry their state bitwise.
+    """
+    mask = jnp.asarray(mask, jnp.bool_)
+    col = mask[:, None]
+    zero_i = jnp.zeros_like(state.step)
+    return _LaneState(
+        ring=jnp.where(col, jnp.inf, state.ring),
+        step=jnp.where(mask, 0, state.step),
+        persist=jnp.where(mask, 0, state.persist),
+        phase=jnp.where(mask, 0, state.phase),
+        confirm_at=jnp.where(mask, jnp.iinfo(jnp.int32).max, state.confirm_at),
+        converged=jnp.where(mask, False, state.converged),
+        detected=jnp.where(mask, jnp.inf, state.detected),
+        verifications=jnp.where(mask, 0, state.verifications),
+        detect_step=jnp.where(mask, -1, state.detect_step),
+    )
+
+
+def make_lane_runner(mode: str, step_fn, chunk: int, ord: float = 2.0):
+    """Build the jitted chunk executable of a lane bucket.
+
+    ``step_fn(X, ops) -> (X_next, contrib[L])`` — a batched problem step
+    (the solvers' ``update_with_residual_batched`` closed over a shared
+    geometry instance, with the per-lane operands passed as the ``ops``
+    pytree so refilling a lane swaps array *rows*, never shapes).
+
+    Returns ``run(X, ops, state, eps, eps_tilde, K, m) -> (X', state',
+    contribs[L, chunk])`` where ``contribs`` is the raw (pre-σ) per-lane
+    contribution series of the chunk — feeding a tenant's recorded series
+    back through ``batched_monitor`` reproduces its verdict bitwise, and
+    the σ-applied series is the exact-residual trace the oracle scores
+    (the batched step is synchronous, so the contribution IS the true
+    residual of the lane's input state).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    if chunk < 1:
+        raise ValueError(f"chunk={chunk} must be >= 1")
+    use_ord = float(ord)
+
+    def run(X, ops, state, eps, eps_tilde, K, m):
+        """One chunk: scan the fused solve+monitor step over all lanes."""
+
+        def body(carry, _):
+            """One device step: problem update, σ, per-lane monitor check."""
+            Xc, s = carry
+            Xn, contrib = step_fn(Xc, ops)
+            c32 = contrib.astype(jnp.float32)
+            g = _sigma_lane(c32, use_ord)
+            s = lane_step_batched(mode, s, g, eps, eps_tilde, K, m)
+            return (Xn, s), c32
+
+        (X, state), cs = jax.lax.scan(body, (X, state), None,
+                                      length=int(chunk))
+        return X, state, cs.T
+
+    return jax.jit(run)
+
+
 def contribution_series(step_fn, x0, T: int) -> jax.Array:
     """[S, T] pre-sweep contribution series from a batched problem step.
 
@@ -421,6 +561,7 @@ def contribution_series(step_fn, x0, T: int) -> jax.Array:
     """
 
     def body(X, _):
+        """One synchronous batched step; emits the pre-step contribution."""
         Xn, c = step_fn(X)
         return Xn, c
 

@@ -1,30 +1,615 @@
-"""Batched serving driver: prefill + decode with KV/SSM caches.
+"""Detection-as-a-service: a multi-tenant batched solve server.
 
-Decode termination uses the paper's mechanism at the batch level: the
-"all sequences finished" predicate is a reduction over per-sequence EOS
-flags, evaluated K steps stale (non-blocking) — the decode loop never
-fences on the termination check; at detection it rolls back nothing
-(generated tokens past EOS are masked), trading ≤K wasted steps for an
-un-fenced steady-state loop, exactly the PFAIT trade.
+The paper's protocol-free detection makes the residual monitor a stateless
+by-product of the iteration — cheap enough that *thousands* of independent
+detections can share one device.  This module productionises that
+observation into a continuous service:
 
-The stale predicate runs through ``core.detection``'s monitor (PFAIT
-lane, ε = 0.5 on the indicator g = 1 − [all finished], ring depth K)
-rather than a hand-rolled flag ring, so serving exercises the same
-detection code path as the solvers and the trace/replay subsystem.
+* **Admission** — tenants submit independent fixed-point problems
+  (ConvDiff, PageRank, mlfixed) with per-tenant ε̃, monitor mode,
+  staleness K, and persistence m (``TenantSpec``).  Invalid requests are
+  rejected at admission with a structured error record; they never reach a
+  packed lane.
+* **Lane packing** — compatible tenants (same family, shape bucket, and
+  monitor mode) are binned into the lanes of one batched device executable:
+  a ``detection.make_lane_runner`` program fusing the family's
+  ``update_with_residual_batched`` step with the vmapped monitor update.
+  Partially-filled batches run with inert *padding lanes* (ε = −1 on a
+  non-negative residual never fires); tenants converging at different
+  steps are retired and their lanes refilled from the queue via
+  ``detection.reset_lanes`` — pure ``where`` ops, so the compiled
+  executable is never rebuilt.
+* **Warm-executable sharing** — executables are keyed by the content-
+  addressing convention of the campaign cache (``benchmarks/campaign.py``):
+  SHA-256 over the canonical signature JSON plus a fingerprint of the
+  sources that define the program's semantics.  A new tenant whose
+  (family, shape-bucket, monitor) signature matches a live executable
+  skips compilation entirely — the service pays one compile per
+  *signature*, not per tenant.
+* **Reporting** — ``DetectionService.report()`` returns a
+  ``runtime.api.ServeReport``: per-tenant certified detection
+  (oracle-scored — the batched step is synchronous, so the σ-applied
+  contribution series IS the exact residual trace) plus service-level
+  throughput, queue wait, and nearest-rank p50/p95/p99 time-to-detection.
+  Time is measured in deterministic service *ticks* (one tick = one
+  ``chunk`` of device steps per bucket), so CI exact-gates the latency
+  distribution; wall seconds are reported alongside but never gated.
+* **Shutdown/drain** — ``shutdown(drain=True)`` stops admission, lets
+  every in-flight lane complete (bounded by the per-tenant step budget),
+  and sheds still-queued tenants with a structured status, so a stopping
+  service always reports what it owes.
+
+``benchmarks/bench_serve.py`` drives the service with an open-loop Poisson
+arrival stream and sweeps the rate to find the saturation knee; the
+``serve-smoke`` CI lane gates it (``check_regression.py serve_smoke``).
+
+The LM decode driver (``serve``) that historically lived here is kept at
+the bottom of the module: its K-stale "all sequences finished" predicate
+through the PFAIT monitor is the same detection trade at the token level.
 """
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
 import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import reduced as reduced_cfg
-from repro.configs.registry import get_arch
 from repro.core import detection
-from repro.models import Model
+from repro.runtime.api import ServeReport, TenantReport
+
+#: problem families the service admits (each has lane_x0/lane_operands
+#: and an ``update_with_residual_batched`` batched step)
+SERVE_FAMILIES = ("convdiff", "pagerank", "mlfixed")
+
+#: padding-lane threshold: residual contributions are non-negative and the
+#: ring initialises to +inf, so a lane with ε = −1 can never fire
+_PAD_EPS = np.float32(-1.0)
+
+_REJECT = "rejected"
+
+
+def make_serve_problem(family: str, seed: int = 0, **kw):
+    """Problem factory over the servable families (mirrors
+    ``benchmarks.common.make_problem``, importable without the benchmarks
+    tree)."""
+    if family == "convdiff":
+        from repro.solvers.convdiff import ConvDiffProblem
+
+        return ConvDiffProblem(seed=seed, **kw)
+    if family == "pagerank":
+        from repro.solvers.pagerank import PageRankProblem
+
+        return PageRankProblem(seed=seed, **kw)
+    if family == "mlfixed":
+        from repro.solvers.mlfixed import MLFixedPointProblem
+
+        return MLFixedPointProblem(seed=seed, **kw)
+    raise KeyError(f"family {family!r} not in {SERVE_FAMILIES}")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Service-level knobs (every tenant in a bucket shares them).
+
+    ``lanes`` is the batch width of one lane executable, ``chunk`` the
+    device steps per service tick, ``max_staleness`` the largest per-tenant
+    K the service accepts (the shared monitor ring is padded to K+1 —
+    padding slots are never read, so verdicts stay bitwise-identical to
+    solo runs), and ``max_steps`` the per-tenant step budget before a
+    non-converging tenant is retired with status ``"timeout"``.
+    """
+
+    lanes: int = 8
+    chunk: int = 16
+    max_staleness: int = 8
+    max_steps: int = 4096
+    margin: float = 10.0          # default PFAIT margin (ε = ε̃ / margin)
+    oracle_factor: float = 10.0   # decade factor for false-detection scoring
+
+    def __post_init__(self):
+        if self.lanes < 1 or self.chunk < 1:
+            raise ValueError(f"lanes={self.lanes}/chunk={self.chunk} must be >= 1")
+        if self.max_staleness < 0:
+            raise ValueError(f"max_staleness={self.max_staleness} must be >= 0")
+        if self.max_steps < self.chunk:
+            raise ValueError(
+                f"max_steps={self.max_steps} must be >= chunk={self.chunk}")
+
+    @property
+    def ring_len(self) -> int:
+        """Monitor ring length shared by every lane (max K + 1)."""
+        return self.max_staleness + 1
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's solve request.
+
+    ``problem`` holds the family's constructor kwargs *minus* the seed
+    (the seed is per-tenant data; everything else defines the shape
+    bucket).  ``margin=None`` inherits the service default; the effective
+    threshold follows ``detection.for_mode``: ε = ε̃/margin for pfait,
+    ε = ε̃ otherwise.
+    """
+
+    tenant: str
+    family: str
+    problem: Mapping[str, Any] = field(default_factory=dict)
+    seed: int = 0
+    eps_tilde: float = 1e-6
+    mode: str = "pfait"
+    staleness: int = 2
+    persistence: int = 4
+    margin: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed executable signatures (the campaign cache convention)
+# ---------------------------------------------------------------------------
+
+_FINGERPRINT_CACHE: Dict[str, str] = {}
+
+
+def executable_fingerprint() -> str:
+    """SHA-256 over the sources that define a lane executable's semantics.
+
+    Same convention as ``benchmarks/campaign.py:code_fingerprint``: the
+    detection layer, the three solver families, and this module.  Editing
+    any of them yields new keys, so a stale warm executable can never be
+    confused with the current code's.
+    """
+    cached = _FINGERPRINT_CACHE.get("fp")
+    if cached is not None:
+        return cached
+    from repro.solvers import convdiff, mlfixed, pagerank
+
+    h = hashlib.sha256()
+    for mod in (detection, convdiff, pagerank, mlfixed):
+        with open(mod.__file__, "rb") as f:
+            h.update(f.read())
+    with open(__file__, "rb") as f:
+        h.update(f.read())
+    _FINGERPRINT_CACHE["fp"] = h.hexdigest()
+    return _FINGERPRINT_CACHE["fp"]
+
+
+def _canonical(obj: Any) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def signature_of(spec: TenantSpec, cfg: ServeConfig) -> Dict[str, Any]:
+    """The shape-bucket signature a tenant packs under: family + problem
+    kwargs (seed excluded) + monitor mode + the service batch geometry."""
+    return {
+        "family": spec.family,
+        "problem": {k: spec.problem[k] for k in sorted(spec.problem)},
+        "mode": spec.mode,
+        "lanes": cfg.lanes,
+        "chunk": cfg.chunk,
+        "ring": cfg.ring_len,
+    }
+
+
+def signature_key(sig: Dict[str, Any]) -> str:
+    """Content-addressed executable key: signature JSON + code fingerprint."""
+    payload = {"sig": sig, "code": executable_fingerprint()}
+    return hashlib.sha256(_canonical(payload).encode()).hexdigest()
+
+
+def _sigma_np(raw: np.ndarray, ord_: float) -> np.ndarray:
+    """Host-side σ of a raw contribution series (numpy twin of
+    ``detection._sigma_lane``)."""
+    raw = np.asarray(raw, dtype=np.float64)
+    if np.isinf(ord_):
+        return raw
+    if ord_ == 2.0:
+        return np.sqrt(raw)
+    return raw ** (1.0 / ord_)
+
+
+# ---------------------------------------------------------------------------
+# Lane bucket — one warm executable, `lanes` resident detection lanes
+# ---------------------------------------------------------------------------
+
+
+class _ActiveTenant:
+    """Book-keeping for a tenant occupying a lane."""
+
+    __slots__ = ("spec", "arrival_tick", "admit_tick", "steps", "chunks",
+                 "ord")
+
+    def __init__(self, spec: TenantSpec, arrival_tick: int, admit_tick: int,
+                 ord_: float):
+        self.spec = spec
+        self.arrival_tick = arrival_tick
+        self.admit_tick = admit_tick
+        self.steps = 0
+        self.chunks: List[np.ndarray] = []   # raw per-chunk contributions
+        self.ord = ord_
+
+
+class _LaneBucket:
+    """One live executable plus its resident lane state.
+
+    Retire/refill never changes shapes, so the jitted runner built at
+    construction (or inherited warm from the service registry) is reused
+    for the bucket's whole life.
+    """
+
+    def __init__(self, key: str, sig: Dict[str, Any], runner, prob0,
+                 cfg: ServeConfig):
+        import jax.numpy as jnp
+
+        self.key = key
+        self.sig = sig
+        self.runner = runner
+        self.prob0 = prob0
+        self.cfg = cfg
+        self.ord = float(prob0.ord)
+        L = cfg.lanes
+        x0 = np.asarray(prob0.lane_x0())
+        self.X = jnp.zeros((L,) + x0.shape, jnp.float32)
+        ops0 = prob0.lane_operands()
+        self.ops = {
+            k: jnp.zeros((L,) + np.shape(v), jnp.float32)
+            for k, v in ops0.items()
+        }
+        self.eps = np.full(L, _PAD_EPS, np.float32)
+        self.epst = np.full(L, _PAD_EPS, np.float32)
+        self.K = np.zeros(L, np.int32)
+        self.m = np.ones(L, np.int32)
+        self.state = detection.init_lanes(L, cfg.ring_len)
+        self.active: List[Optional[_ActiveTenant]] = [None] * L
+
+    @property
+    def free_lanes(self) -> List[int]:
+        return [i for i, a in enumerate(self.active) if a is None]
+
+    @property
+    def busy(self) -> bool:
+        return any(a is not None for a in self.active)
+
+    def admit(self, spec: TenantSpec, prob, arrival_tick: int,
+              admit_tick: int, margin_default: float) -> None:
+        """Pack one tenant into a free lane (caller guarantees one)."""
+        import jax.numpy as jnp
+
+        lane = self.free_lanes[0]
+        margin = margin_default if spec.margin is None else spec.margin
+        eps = detection.for_mode(
+            spec.mode, spec.eps_tilde, margin=margin).eps
+        K = 0 if spec.mode == "sync" else int(spec.staleness)
+        self.X = self.X.at[lane].set(
+            jnp.asarray(prob.lane_x0(), jnp.float32))
+        for k, v in prob.lane_operands().items():
+            self.ops[k] = self.ops[k].at[lane].set(
+                jnp.asarray(v, jnp.float32))
+        self.eps[lane] = np.float32(eps)
+        self.epst[lane] = np.float32(spec.eps_tilde)
+        self.K[lane] = K
+        self.m[lane] = int(spec.persistence)
+        mask = np.zeros(self.cfg.lanes, bool)
+        mask[lane] = True
+        self.state = detection.reset_lanes(self.state, mask)
+        self.active[lane] = _ActiveTenant(spec, arrival_tick, admit_tick,
+                                          self.ord)
+
+    def run_chunk(self) -> Tuple[Any, np.ndarray]:
+        """Advance every lane one chunk; returns (lane state, raw series)."""
+        import jax.numpy as jnp
+
+        self.X, self.state, cs = self.runner(
+            self.X, self.ops, self.state,
+            jnp.asarray(self.eps), jnp.asarray(self.epst),
+            jnp.asarray(self.K), jnp.asarray(self.m))
+        return self.state, np.asarray(cs)
+
+    def release(self, lane: int) -> None:
+        """Retire a lane back to inert padding (operand rows stay — ε = −1
+        keeps the lane's monitor unfireable, and a refill overwrites them)."""
+        self.eps[lane] = _PAD_EPS
+        self.epst[lane] = _PAD_EPS
+        self.K[lane] = 0
+        self.m[lane] = 1
+        mask = np.zeros(self.cfg.lanes, bool)
+        mask[lane] = True
+        self.state = detection.reset_lanes(self.state, mask)
+        self.active[lane] = None
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+
+class DetectionService:
+    """Continuous multi-tenant detection service (see module docstring).
+
+    Drive it with ``submit()`` + ``step_tick()`` (or the ``serve_detection``
+    convenience loop), then ``report()``.  All scheduling is deterministic
+    in the tick domain for a fixed submission sequence.
+    """
+
+    def __init__(self, cfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.tick_count = 0
+        self.compile_count = 0
+        self.warm_hits = 0
+        self.reports: List[TenantReport] = []
+        self._runners: Dict[str, Any] = {}      # warm-executable registry
+        self._buckets: Dict[str, _LaneBucket] = {}
+        self._queues: Dict[str, List[Tuple[TenantSpec, Any, int]]] = {}
+        self._accepting = True
+        self._wall_s = 0.0
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, spec: TenantSpec,
+               arrival_tick: Optional[int] = None) -> Dict[str, Any]:
+        """Admit one tenant (validated) or reject it with a structured
+        error record ``{"tenant", "admitted", "error", "reason"}``.
+
+        A rejected tenant never reaches a packed lane: validation happens
+        entirely at admission, including constructing the seeded problem,
+        so a malformed spec cannot poison a running batch.
+        """
+        arrival = self.tick_count if arrival_tick is None else int(arrival_tick)
+        err = self._validate(spec)
+        if err is None and not self._accepting:
+            err = ("shutdown", "service is no longer accepting tenants")
+        prob = None
+        if err is None:
+            try:
+                prob = make_serve_problem(spec.family, seed=int(spec.seed),
+                                          **dict(spec.problem))
+            except Exception as exc:  # constructor validation is the contract
+                err = ("problem_invalid", f"{type(exc).__name__}: {exc}")
+        if err is not None:
+            code, reason = err
+            self.reports.append(TenantReport(
+                tenant=spec.tenant, status=_REJECT if code != "shutdown"
+                else "shed",
+                family=spec.family, mode=spec.mode,
+                eps_tilde=float(spec.eps_tilde),
+                arrival_tick=arrival, error=code, reason=reason))
+            return {"tenant": spec.tenant, "admitted": False,
+                    "error": code, "reason": reason}
+        sig = signature_of(spec, self.cfg)
+        key = signature_key(sig)
+        self._queues.setdefault(key, []).append((spec, prob, arrival))
+        return {"tenant": spec.tenant, "admitted": True, "error": None,
+                "reason": None, "signature": key}
+
+    def _validate(self, spec: TenantSpec) -> Optional[Tuple[str, str]]:
+        if spec.family not in SERVE_FAMILIES:
+            return ("unknown_family",
+                    f"family {spec.family!r} not in {SERVE_FAMILIES}")
+        if spec.mode not in detection.MODES:
+            return ("unknown_mode",
+                    f"mode {spec.mode!r} not in {detection.MODES}")
+        if not (np.isfinite(spec.eps_tilde) and spec.eps_tilde > 0):
+            return ("bad_eps", f"eps_tilde={spec.eps_tilde!r} must be finite > 0")
+        if spec.mode != "sync" and not (
+                0 <= int(spec.staleness) <= self.cfg.max_staleness):
+            return ("bad_staleness",
+                    f"staleness={spec.staleness} outside [0, "
+                    f"{self.cfg.max_staleness}]")
+        if int(spec.persistence) < 1:
+            return ("bad_persistence",
+                    f"persistence={spec.persistence} must be >= 1")
+        if spec.margin is not None and spec.margin < 1.0:
+            return ("bad_margin", f"margin={spec.margin} must be >= 1")
+        return None
+
+    # -- lane packing + the tick loop ----------------------------------------
+
+    def _runner_for(self, key: str, sig: Dict[str, Any], prob0):
+        """Warm-executable registry: compile once per signature, ever."""
+        runner = self._runners.get(key)
+        if runner is not None:
+            self.warm_hits += 1
+            return runner
+
+        def step_fn(X, ops):
+            return prob0.update_with_residual_batched(X, **ops)
+
+        runner = detection.make_lane_runner(
+            sig["mode"], step_fn, sig["chunk"], ord=float(prob0.ord))
+        self._runners[key] = runner
+        self.compile_count += 1
+        return runner
+
+    def _pack(self) -> None:
+        for key, queue in self._queues.items():
+            if not queue:
+                continue
+            bucket = self._buckets.get(key)
+            if bucket is None:
+                spec0, prob0, _ = queue[0]
+                sig = signature_of(spec0, self.cfg)
+                runner = self._runner_for(key, sig, prob0)
+                bucket = _LaneBucket(key, sig, runner, prob0, self.cfg)
+                self._buckets[key] = bucket
+            else:
+                # a live bucket IS the warm executable for its signature
+                self.warm_hits += len(queue[:len(bucket.free_lanes)])
+            while queue and bucket.free_lanes:
+                spec, prob, arrival = queue.pop(0)
+                bucket.admit(spec, prob, arrival, self.tick_count,
+                             self.cfg.margin)
+
+    def step_tick(self) -> None:
+        """One service tick: pack free lanes from the queues, then advance
+        every busy bucket one chunk and harvest converged/expired lanes."""
+        t0 = time.perf_counter()
+        self._pack()
+        for bucket in self._buckets.values():
+            if not bucket.busy:
+                continue
+            state, cs = bucket.run_chunk()
+            conv = np.asarray(state.converged)
+            dstep = np.asarray(state.detect_step)
+            detected = np.asarray(state.detected)
+            for lane, tenant in enumerate(bucket.active):
+                if tenant is None:
+                    continue
+                tenant.chunks.append(cs[lane])
+                tenant.steps += self.cfg.chunk
+                if conv[lane]:
+                    self._retire(bucket, lane, "served",
+                                 int(dstep[lane]), float(detected[lane]))
+                elif tenant.steps >= self.cfg.max_steps:
+                    self._retire(bucket, lane, "timeout", None, None)
+        self.tick_count += 1
+        self._wall_s += time.perf_counter() - t0
+
+    def _retire(self, bucket: _LaneBucket, lane: int, status: str,
+                detect_step: Optional[int],
+                detected: Optional[float]) -> None:
+        tenant = bucket.active[lane]
+        spec = tenant.spec
+        raw = np.concatenate(tenant.chunks)[: tenant.steps]
+        series = _sigma_np(raw, tenant.ord)
+        from repro.core.termination import (
+            detection_consistent,
+            oracle_detect_step,
+        )
+
+        oracle = oracle_detect_step(series, spec.eps_tilde)
+        false = False
+        if status == "served":
+            false = not detection_consistent(
+                detect_step, series, spec.eps_tilde,
+                factor=self.cfg.oracle_factor)
+        done = self.tick_count + 1   # harvested at the end of this tick
+        self.reports.append(TenantReport(
+            tenant=spec.tenant, status=status, family=spec.family,
+            mode=spec.mode, eps_tilde=float(spec.eps_tilde),
+            converged=(status == "served"),
+            detect_step=detect_step, detected_residual=detected,
+            steps=tenant.steps,
+            arrival_tick=tenant.arrival_tick,
+            admit_tick=tenant.admit_tick, done_tick=done,
+            queue_wait_ticks=tenant.admit_tick - tenant.arrival_tick,
+            ttd_ticks=done - tenant.arrival_tick,
+            oracle_step=oracle, false_detection=false,
+            signature=bucket.key))
+        bucket.release(lane)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        """True while any lane is occupied or any tenant is queued."""
+        return (any(b.busy for b in self._buckets.values())
+                or any(self._queues.values()))
+
+    def run(self, max_ticks: Optional[int] = None) -> None:
+        """Tick until drained (or ``max_ticks`` more ticks have elapsed)."""
+        end = None if max_ticks is None else self.tick_count + int(max_ticks)
+        while self.busy and (end is None or self.tick_count < end):
+            self.step_tick()
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop admission; optionally drain.
+
+        With ``drain=True`` every in-flight lane completes (bounded by the
+        per-tenant ``max_steps`` budget) and reports; queued-but-unpacked
+        tenants are shed either way — a shutdown must not start new work.
+        """
+        self._accepting = False
+        for queue in self._queues.values():
+            for spec, _, arrival in queue:
+                self.reports.append(TenantReport(
+                    tenant=spec.tenant, status="shed", family=spec.family,
+                    mode=spec.mode, eps_tilde=float(spec.eps_tilde),
+                    arrival_tick=arrival, error="shutdown",
+                    reason="queued at shutdown"))
+            queue.clear()
+        if drain:
+            # max_steps bounds every lane, so this loop terminates
+            while any(b.busy for b in self._buckets.values()):
+                self.step_tick()
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self) -> ServeReport:
+        """Assemble the service-level ``ServeReport``."""
+        served = [r for r in self.reports if r.status == "served"]
+        timeouts = sum(r.status == "timeout" for r in self.reports)
+        ttd = [r.ttd_ticks for r in served]
+        qw = [r.queue_wait_ticks for r in served]
+        wall = self._wall_s
+        return ServeReport(
+            converged=bool(served) and timeouts == 0,
+            detected_residual=None, detect_step=None,
+            outer_iters=self.tick_count,
+            residual_history=np.empty(0),
+            wall_segments=[("serve", wall)],
+            trace=None, membership_log=[], x=None, raw=None,
+            tenants=list(self.reports),
+            served=len(served),
+            rejected=sum(r.status == _REJECT for r in self.reports),
+            shed=sum(r.status == "shed" for r in self.reports),
+            timeouts=timeouts,
+            false_detections=sum(r.false_detection for r in self.reports),
+            compile_count=self.compile_count,
+            warm_hits=self.warm_hits,
+            ticks=self.tick_count,
+            queue_wait_ticks=_percentiles(qw),
+            ttd_ticks=_percentiles(ttd),
+            throughput={
+                "tenants_per_tick": (len(served) / self.tick_count
+                                     if self.tick_count else 0.0),
+                "tenants_per_s": len(served) / wall if wall > 0 else 0.0,
+            },
+        )
+
+
+def _percentiles(xs: Sequence[float]) -> Dict[str, float]:
+    """Nearest-rank percentiles (deterministic integers in, integers out —
+    CI exact-gates these)."""
+    if not xs:
+        return {}
+    s = sorted(xs)
+    out = {}
+    for q in (50, 95, 99):
+        rank = max(int(np.ceil(q / 100.0 * len(s))) - 1, 0)
+        out[f"p{q}"] = float(s[rank])
+    return out
+
+
+def serve_detection(requests: Sequence[Tuple[TenantSpec, int]],
+                    cfg: ServeConfig = ServeConfig()) -> ServeReport:
+    """Open-loop convenience driver: play ``(spec, arrival_tick)`` requests
+    into a fresh service, tick until everything (queue + lanes) drains, and
+    return the ``ServeReport``.
+
+    Arrivals are sorted by tick; the service idles (ticks with no busy
+    bucket) through gaps in the schedule, so queue waits are measured
+    against the *requested* arrival time — the open-loop convention a
+    Poisson load generator needs (``benchmarks/bench_serve.py``).
+    """
+    pending = sorted(requests, key=lambda ra: (ra[1], ra[0].tenant))
+    svc = DetectionService(cfg)
+    i = 0
+    while i < len(pending) or svc.busy:
+        while i < len(pending) and pending[i][1] <= svc.tick_count:
+            spec, arrival = pending[i]
+            svc.submit(spec, arrival_tick=arrival)
+            i += 1
+        svc.step_tick()
+    svc.shutdown(drain=True)
+    return svc.report()
+
+
+# ---------------------------------------------------------------------------
+# LM decode serving (the historical driver — K-stale batch termination)
+# ---------------------------------------------------------------------------
 
 
 def serve(
@@ -38,6 +623,24 @@ def serve(
     seed: int = 0,
     greedy: bool = True,
 ):
+    """Batched prefill + decode with the paper's detection at batch level.
+
+    The "all sequences finished" predicate is a reduction over per-sequence
+    EOS flags evaluated K steps stale (PFAIT lane, ε = 0.5 on the indicator
+    g = 1 − [all finished], ring depth K): the decode loop never fences on
+    the termination check, trading ≤K wasted steps for an un-fenced
+    steady-state loop.  On exit the report is *drained*: tokens generated
+    past a sequence's first EOS are masked back to ``eos_id``, and
+    ``stopped_by`` records whether the stale detector fired or the
+    ``max_new`` budget ran out with sequences still unfinished.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import reduced as reduced_cfg
+    from repro.configs.registry import get_arch
+    from repro.models import Model
+
     cfg = get_arch(arch)
     if use_reduced:
         cfg = reduced_cfg(cfg)
@@ -60,6 +663,7 @@ def serve(
     logits, cache = prefill(params, prompts)
     # extend caches with room for max_new tokens
     def extend(u):
+        """Pad every layer's KV cache with room for max_new tokens."""
         out = []
         for entry in u:
             e = {}
@@ -84,6 +688,7 @@ def serve(
                                   staleness=staleness, ord=float("inf"))
     mstate = detection.init_state(mon)
     steps_done = 0
+    stopped_by = "budget"
     for i in range(max_new - 1):
         inp = tok[:, None]
         if cfg.frontend is not None:
@@ -96,30 +701,72 @@ def serve(
         mstate = detection.step(mon, mstate, g)
         steps_done = i + 1
         if bool(detection.should_stop(mstate)):   # stale view only
+            stopped_by = "detector"
             break
-    toks = jnp.stack(generated, axis=1)
+    toks = np.asarray(jnp.stack(generated, axis=1))
+    # drain: mask the ≤K tokens generated past each sequence's first EOS —
+    # the stale detector deliberately over-runs, the report must not leak
+    # the over-run tokens as real output
+    eos_hits = toks == eos_id
+    past_eos = np.cumsum(np.cumsum(eos_hits, axis=1), axis=1) > 1
+    toks = np.where(past_eos, eos_id, toks)
     wall = time.time() - t0
     return {
-        "tokens": np.asarray(toks),
+        "tokens": toks,
         "finished": np.asarray(finished),
         "steps": steps_done,
+        "stopped_by": stopped_by,
         "wall_s": wall,
         "tok_per_s": batch * steps_done / max(wall, 1e-9),
     }
 
 
+def _demo_service() -> None:
+    """Tiny mixed-tenant demo of the detection service (CLI)."""
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(12):
+        fam = ("convdiff", "pagerank", "mlfixed")[i % 3]
+        problem = {
+            "convdiff": {"n": 8, "p": 4, "rho": 0.9},
+            "pagerank": {"n": 64, "p": 4},
+            "mlfixed": {"n": 16, "p": 4, "m_rows": 48, "cond": 10.0},
+        }[fam]
+        spec = TenantSpec(
+            tenant=f"t{i:02d}", family=fam, problem=problem,
+            seed=int(rng.integers(0, 4)),
+            eps_tilde=float(rng.choice([1e-4, 1e-5])),
+            mode=str(rng.choice(["pfait", "nfais5"])),
+            staleness=int(rng.integers(0, 5)))
+        reqs.append((spec, int(rng.integers(0, 6))))
+    rep = serve_detection(reqs, ServeConfig(lanes=4, chunk=16,
+                                            max_steps=2048))
+    print(f"[serve] served={rep.served} rejected={rep.rejected} "
+          f"false={rep.false_detections} compiles={rep.compile_count} "
+          f"warm={rep.warm_hits} ticks={rep.ticks} "
+          f"ttd={rep.ttd_ticks} wall={rep.wall_s:.2f}s")
+
+
 def main() -> None:
+    """CLI: LM decode serving (default) or the detection-service demo."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--detection-demo", action="store_true",
+                    help="run the multi-tenant detection-service demo")
     args = ap.parse_args()
+    if args.detection_demo:
+        _demo_service()
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --detection-demo is given")
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 max_new=args.max_new, use_reduced=args.reduced)
     print(f"[serve] generated {out['tokens'].shape} in {out['wall_s']:.2f}s "
-          f"({out['tok_per_s']:.1f} tok/s)")
+          f"({out['tok_per_s']:.1f} tok/s, stopped by {out['stopped_by']})")
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -122,7 +122,73 @@ class RunReport:
 
     @property
     def wall_s(self) -> float:
+        """Total wall seconds across all measured run segments."""
         return float(sum(s for _, s in self.wall_segments))
+
+
+@dataclass
+class TenantReport:
+    """Per-tenant outcome of one detection-service solve (``launch/serve.py``).
+
+    ``status`` is the tenant's terminal state: ``"served"`` (detection
+    fired), ``"timeout"`` (step budget exhausted without detection),
+    ``"rejected"`` (failed admission validation — ``error``/``reason``
+    carry the structured cause), or ``"shed"`` (still queued when the
+    service shut down without drain).  Tick fields are in service ticks
+    (one tick = one ``chunk`` of device steps per lane bucket) and are
+    deterministic for a seeded load; ``detect_step`` is the lane-local
+    check index, bitwise-comparable to a solo ``detection.batched_monitor``
+    run over the same contribution series.
+    """
+
+    tenant: str
+    status: str
+    family: str = ""
+    mode: str = ""
+    eps_tilde: float = float("nan")
+    converged: bool = False
+    detect_step: Optional[int] = None
+    detected_residual: Optional[float] = None
+    steps: int = 0                       # device steps executed
+    arrival_tick: int = 0
+    admit_tick: Optional[int] = None
+    done_tick: Optional[int] = None
+    queue_wait_ticks: Optional[int] = None
+    ttd_ticks: Optional[int] = None      # time-to-detection, arrival → done
+    oracle_step: Optional[int] = None    # first true crossing below ε̃
+    false_detection: bool = False
+    signature: str = ""                  # executable key (warm-sharing id)
+    error: Optional[str] = None          # rejection code
+    reason: Optional[str] = None         # rejection detail
+
+
+@dataclass
+class ServeReport(RunReport):
+    """Service-level ``RunReport`` of a multi-tenant detection campaign.
+
+    The inherited fields take their service-level meaning: ``converged``
+    is True iff every admitted tenant's detection fired (no timeouts),
+    ``outer_iters`` counts service ticks, ``wall_segments`` holds the
+    single ``("serve", seconds)`` segment, and ``x``/``trace`` are unused
+    (the per-tenant solutions stay on device; residual series live on the
+    ``TenantReport``\\ s).  ``queue_wait_ticks``/``ttd_ticks`` are
+    nearest-rank p50/p95/p99 percentile dicts over served tenants —
+    deterministic, so CI exact-gates them (``check_regression.py
+    serve_smoke``).
+    """
+
+    tenants: List[TenantReport] = field(default_factory=list)
+    served: int = 0
+    rejected: int = 0
+    shed: int = 0
+    timeouts: int = 0
+    false_detections: int = 0
+    compile_count: int = 0               # distinct lane executables built
+    warm_hits: int = 0                   # admissions served by a live/warm executable
+    ticks: int = 0
+    queue_wait_ticks: Dict[str, float] = field(default_factory=dict)
+    ttd_ticks: Dict[str, float] = field(default_factory=dict)
+    throughput: Dict[str, float] = field(default_factory=dict)
 
 
 def _history(trace_arr, outer: int, tlen: int) -> np.ndarray:

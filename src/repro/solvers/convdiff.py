@@ -459,6 +459,22 @@ class ConvDiffProblem:
             contrib = jnp.sum(r * r, axis=(1, 2, 3))
         return X_next, contrib
 
+    def lane_x0(self) -> np.ndarray:
+        """Canonical initial state of one detection-service lane (f32)."""
+        return np.zeros((self.n, self.n, self.n), np.float32)
+
+    def lane_operands(self) -> dict:
+        """This instance's per-lane operands for the batched step.
+
+        Stacking these dicts over lanes (one seeded instance per lane) and
+        passing them as ``update_with_residual_batched(X, **stacked)``
+        gives every lane its own rhs while the stencil — seed-independent
+        geometry — is shared from any instance of the same shape bucket.
+        Used by ``launch/serve.py`` and the ``detection_grid`` campaign
+        cells.
+        """
+        return {"b": np.asarray(self.b_global, np.float32)}
+
     # -- helpers -------------------------------------------------------------
     def assemble(self, xs: Sequence[np.ndarray]) -> np.ndarray:
         bx, by, _ = self.part.block

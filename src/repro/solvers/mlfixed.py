@@ -264,6 +264,26 @@ class MLFixedPointProblem:
             contrib = jnp.sum(jnp.abs(R) ** self.ord, axis=-1)
         return Y, contrib
 
+    def lane_x0(self) -> np.ndarray:
+        """Canonical initial state of one detection-service lane (f32)."""
+        return np.zeros((self.n,), np.float32)
+
+    def lane_operands(self) -> dict:
+        """This instance's per-lane operands for the batched step.
+
+        The seeded data matrices and the per-seed safe step size γ are
+        per-lane; ``m_rows`` and ``l2`` are shape-bucket constants shared
+        from any instance.  Used by ``launch/serve.py`` and the
+        ``detection_grid`` campaign cells.
+        """
+        if self.task == "lstsq":
+            return {"H": np.asarray(self.H, np.float32),
+                    "c": np.asarray(self.c, np.float32),
+                    "gamma": np.float32(self.gamma)}
+        return {"A": np.asarray(self.A, np.float32),
+                "s": np.asarray(self.s, np.float32),
+                "gamma": np.float32(self.gamma)}
+
     # -- helpers -------------------------------------------------------------
     def assemble(self, xs: Sequence[np.ndarray]) -> np.ndarray:
         return np.concatenate(list(xs))

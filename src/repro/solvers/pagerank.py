@@ -246,6 +246,20 @@ class PageRankProblem:
             contrib = jnp.sum(jnp.abs(R) ** self.ord, axis=1)
         return Y, contrib
 
+    def lane_x0(self) -> np.ndarray:
+        """Canonical initial state of one detection-service lane (f32)."""
+        return np.full((self.n,), 1.0 / self.n, np.float32)
+
+    def lane_operands(self) -> dict:
+        """This instance's per-lane operands for the batched step.
+
+        Only the graph operator is seeded; the teleport term ``v`` and the
+        damping are shape-bucket constants shared from any instance (see
+        ``update_with_residual_batched``).  Used by ``launch/serve.py`` and
+        the ``detection_grid`` campaign cells.
+        """
+        return {"P": np.asarray(self.to_dense(), np.float32)}
+
     # -- helpers -------------------------------------------------------------
     def assemble(self, xs: Sequence[np.ndarray]) -> np.ndarray:
         return np.concatenate(list(xs))

@@ -46,19 +46,24 @@ class GridPartition:
 
     @property
     def p(self) -> int:
+        """Total subdomain count px x py."""
         return self.px * self.py
 
     @property
     def block(self) -> Tuple[int, int, int]:
+        """Per-subdomain block extents (x, y, full z pencil)."""
         return (self.n // self.px, self.n // self.py, self.n)
 
     def coords(self, i: int) -> Tuple[int, int]:
+        """Row-major (cx, cy) grid coordinates of rank i."""
         return divmod(i, self.py)
 
     def rank(self, cx: int, cy: int) -> int:
+        """Row-major rank of grid coordinates (cx, cy)."""
         return cx * self.py + cy
 
     def neighbors(self, i: int) -> List[int]:
+        """Face-adjacent ranks of subdomain i (4-neighbourhood)."""
         cx, cy = self.coords(i)
         out = []
         if cx > 0:
@@ -85,6 +90,7 @@ class GridPartition:
         raise ValueError(f"{j} is not a neighbour of {i}")
 
     def offsets(self, i: int) -> Tuple[int, int]:
+        """Global (x, y) grid offsets of subdomain i's block origin."""
         cx, cy = self.coords(i)
         bx, by, _ = self.block
         return (cx * bx, cy * by)
@@ -129,10 +135,12 @@ class MeshPartition:
     # -- basic facts --------------------------------------------------------
     @property
     def ndim(self) -> int:
+        """Partitioned mesh dimensionality (1, 2 or 3)."""
         return len(self.shape)
 
     @property
     def p(self) -> int:
+        """Total shard count (product of the mesh shape)."""
         return int(math.prod(self.shape))
 
     @property
@@ -142,6 +150,7 @@ class MeshPartition:
 
     @property
     def block(self) -> Tuple[int, int, int]:
+        """Per-shard block extents along the three grid axes."""
         return tuple(self.n // s for s in self.full_shape)
 
     def block_spec(self, i: int) -> Tuple[Tuple[int, int], ...]:
@@ -152,6 +161,7 @@ class MeshPartition:
 
     # -- rank <-> coords (row-major, matching the device-mesh layout) -------
     def coords(self, i: int) -> Tuple[int, ...]:
+        """Row-major mesh coordinates of rank i."""
         if not 0 <= i < self.p:
             raise ValueError(f"rank {i} out of range for p={self.p}")
         out = []
@@ -161,6 +171,7 @@ class MeshPartition:
         return tuple(reversed(out))
 
     def rank(self, *coords: int) -> int:
+        """Row-major rank of the given mesh coordinates."""
         if len(coords) != self.ndim:
             raise ValueError(f"expected {self.ndim} coords, got {coords}")
         r = 0
@@ -171,11 +182,13 @@ class MeshPartition:
         return r
 
     def offsets(self, i: int) -> Tuple[int, int, int]:
+        """Global grid offsets of shard i's block origin."""
         c = self.coords(i) + (0,) * (3 - self.ndim)
         return tuple(cd * bd for cd, bd in zip(c, self.block))
 
     # -- face-neighbour topology --------------------------------------------
     def neighbors(self, i: int) -> List[int]:
+        """Face-adjacent ranks of shard i across every mesh axis."""
         c = self.coords(i)
         out = []
         for d in range(self.ndim):

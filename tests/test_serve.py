@@ -1,0 +1,244 @@
+"""Detection service: lane packing, warm reuse, drain, admission.
+
+The parity anchor: a tenant served through the packed multi-tenant lanes
+must reach the SAME verdict (detect step, detected residual) as a solo
+``detection.batched_monitor`` run over the tenant's recorded contribution
+series — bitwise, because padding ring slots are never read and
+``reset_lanes`` is pure ``where`` ops.
+"""
+import numpy as np
+import pytest
+
+from repro.core import detection
+from repro.launch.serve import (
+    DetectionService,
+    ServeConfig,
+    TenantSpec,
+    serve_detection,
+    signature_key,
+    signature_of,
+)
+
+CFG = ServeConfig(lanes=4, chunk=16, max_steps=1024, max_staleness=8)
+
+
+def spec(tenant="t0", family="convdiff", eps_tilde=1e-4, mode="pfait",
+         K=2, m=4, seed=0, **problem):
+    problem = problem or {"n": 8, "p": 4, "rho": 0.9}
+    return TenantSpec(tenant=tenant, family=family, problem=problem,
+                      seed=seed, eps_tilde=eps_tilde, mode=mode,
+                      staleness=K, persistence=m)
+
+
+def serve_specs(specs, cfg=CFG, arrivals=None):
+    reqs = [(s, 0 if arrivals is None else arrivals[i])
+            for i, s in enumerate(specs)]
+    return serve_detection(reqs, cfg)
+
+
+def tenant_reports(rep):
+    return {t.tenant: t for t in rep.tenants}
+
+
+# ---------------------------------------------------------------------------
+# parity vs solo batched_monitor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["pfait", "nfais5", "sync"])
+def test_packed_verdict_matches_solo_monitor(mode):
+    """A packed tenant's (detect_step, residual) is bitwise what a solo
+    batched_monitor produces on the recorded series."""
+    eps_tilde = 1e-4
+    K = 0 if mode == "sync" else 3
+    specs = [spec(f"t{i}", mode=mode, eps_tilde=eps_tilde, K=K, seed=i)
+             for i in range(3)]
+    rep = serve_specs(specs)
+    mon = detection.for_mode(mode, eps_tilde)
+    for t in rep.tenants:
+        assert t.status == "served", t
+        # reconstruct the solo verdict from the exact per-seed series the
+        # grid cell would produce for this tenant's problem
+        from repro.launch.serve import make_serve_problem
+
+        import jax.numpy as jnp
+
+        pr = make_serve_problem(t.family, seed=int(t.tenant[1:]),
+                                **dict(specs[0].problem))
+        x0 = jnp.asarray(np.asarray(pr.lane_x0())[None], jnp.float32)
+        ops = {k: jnp.asarray(np.asarray(v)[None], jnp.float32)
+               for k, v in pr.lane_operands().items()}
+        series = detection.contribution_series(
+            lambda X: pr.update_with_residual_batched(X, **ops), x0,
+            t.steps)
+        v = detection.batched_monitor(
+            mode, np.asarray(series), [mon.eps], [K], [4],
+            ord=float(pr.ord), eps_tilde=[eps_tilde])
+        assert bool(np.asarray(v.converged)[0, 0, 0, 0])
+        assert int(np.asarray(v.detect_step)[0, 0, 0, 0]) == t.detect_step
+        assert float(np.asarray(
+            v.detected_residual)[0, 0, 0, 0]) == t.detected_residual
+
+
+def test_retire_refill_preserves_later_tenant_verdicts():
+    """More tenants than lanes: later tenants ride recycled lanes and must
+    get the same verdict as when served alone."""
+    cfg = ServeConfig(lanes=2, chunk=16, max_steps=1024)
+    specs = [spec(f"t{i}", eps_tilde=(1e-3 if i % 2 else 1e-4), seed=i)
+             for i in range(6)]
+    packed = tenant_reports(serve_specs(specs, cfg))
+    for s in specs:
+        solo = tenant_reports(serve_specs([s], cfg))[s.tenant]
+        assert packed[s.tenant].status == solo.status == "served"
+        assert packed[s.tenant].detect_step == solo.detect_step
+        assert packed[s.tenant].detected_residual == solo.detected_residual
+
+
+def test_mixed_eps_lanes_detect_at_different_steps():
+    """Lanes with different ε̃ in ONE bucket fire at different steps."""
+    specs = [spec("loose", eps_tilde=1e-3), spec("tight", eps_tilde=1e-5)]
+    rep = tenant_reports(serve_specs(specs))
+    assert rep["loose"].status == rep["tight"].status == "served"
+    assert rep["loose"].detect_step < rep["tight"].detect_step
+    # same signature: one executable served both
+    assert rep["loose"].signature == rep["tight"].signature
+
+
+def test_padding_lanes_inert():
+    """One tenant in a 4-lane bucket: the 3 padding lanes never converge
+    and produce no reports."""
+    rep = serve_specs([spec("only")])
+    assert rep.served == 1 and len(rep.tenants) == 1
+    assert rep.false_detections == 0
+
+
+def test_mixed_families_and_zero_false_detections():
+    specs = [
+        spec("cd", family="convdiff", eps_tilde=1e-4, n=8, p=4, rho=0.9),
+        spec("pr", family="pagerank", eps_tilde=1e-6, n=64, p=4),
+        spec("ml", family="mlfixed", eps_tilde=1e-4, n=16, p=4, m_rows=48,
+             cond=10.0),
+    ]
+    rep = serve_specs(specs)
+    assert rep.served == 3
+    assert rep.false_detections == 0
+    assert sorted(t.family for t in rep.tenants) == [
+        "convdiff", "mlfixed", "pagerank"]
+
+
+# ---------------------------------------------------------------------------
+# warm-executable sharing
+# ---------------------------------------------------------------------------
+
+
+def test_warm_cache_hit_on_signature_identical_tenants():
+    """Signature-identical tenants (different seed/ε̃) share one compile."""
+    svc = DetectionService(CFG)
+    for i in range(6):
+        out = svc.submit(spec(f"t{i}", seed=i,
+                              eps_tilde=(1e-3, 1e-4)[i % 2]))
+        assert out["admitted"]
+    svc.run()
+    rep = svc.report()
+    assert rep.served == 6
+    assert rep.compile_count == 1          # one signature, one executable
+    assert rep.warm_hits >= 2              # refills rode the live executable
+
+
+def test_distinct_signatures_compile_separately():
+    svc = DetectionService(CFG)
+    svc.submit(spec("a", family="convdiff"))
+    svc.submit(spec("b", family="pagerank", eps_tilde=1e-6, n=64, p=4))
+    svc.submit(spec("c", family="convdiff", mode="nfais5"))
+    svc.run()
+    rep = svc.report()
+    assert rep.served == 3
+    assert rep.compile_count == 3
+
+
+def test_signature_key_ignores_seed_and_eps():
+    a = spec("a", seed=0, eps_tilde=1e-3)
+    b = spec("b", seed=7, eps_tilde=1e-5, K=5, m=2)
+    assert signature_key(signature_of(a, CFG)) == \
+        signature_key(signature_of(b, CFG))
+    c = spec("c", mode="nfais5")
+    assert signature_key(signature_of(a, CFG)) != \
+        signature_key(signature_of(c, CFG))
+
+
+# ---------------------------------------------------------------------------
+# admission + shutdown/drain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad,code", [
+    (dict(family="heat"), "unknown_family"),
+    (dict(mode="magic"), "unknown_mode"),
+    (dict(eps_tilde=-1.0), "bad_eps"),
+    (dict(eps_tilde=float("nan")), "bad_eps"),
+    (dict(K=99), "bad_staleness"),
+    (dict(m=0), "bad_persistence"),
+    (dict(n=7, p=4, rho=0.9), "problem_invalid"),   # 7 % 4 != 0
+])
+def test_admission_rejects_structured(bad, code):
+    svc = DetectionService(CFG)
+    out = svc.submit(spec("bad", **bad))
+    assert out["admitted"] is False
+    assert out["error"] == code
+    assert out["reason"]
+    rep = svc.report()
+    assert rep.rejected == 1
+    assert rep.tenants[0].status == "rejected"
+    assert rep.tenants[0].error == code
+
+
+def test_rejected_tenant_never_blocks_valid_ones():
+    svc = DetectionService(CFG)
+    svc.submit(spec("bad", family="heat"))
+    svc.submit(spec("good"))
+    svc.run()
+    rep = svc.report()
+    assert rep.served == 1 and rep.rejected == 1
+
+
+def test_shutdown_drains_inflight_and_sheds_queued():
+    """In-flight lanes complete and report on shutdown; tenants still in
+    the admission queue are shed with a structured status."""
+    cfg = ServeConfig(lanes=1, chunk=16, max_steps=1024)
+    svc = DetectionService(cfg)
+    for i in range(3):        # 1 lane: t1/t2 queue behind t0
+        svc.submit(spec(f"t{i}", seed=i))
+    svc.step_tick()           # t0 packed and in flight
+    svc.shutdown(drain=True)
+    rep = tenant_reports(svc.report())
+    assert rep["t0"].status == "served"            # in-flight drained
+    assert {rep["t1"].status, rep["t2"].status} == {"shed"}
+    assert rep["t1"].error == "shutdown"
+
+
+def test_submit_after_shutdown_is_shed():
+    svc = DetectionService(CFG)
+    svc.shutdown()
+    out = svc.submit(spec("late"))
+    assert out["admitted"] is False and out["error"] == "shutdown"
+    assert svc.report().shed == 1
+
+
+def test_open_loop_queue_wait_measured_from_arrival():
+    """With 1 lane, the second tenant's queue wait spans the first's
+    service time."""
+    cfg = ServeConfig(lanes=1, chunk=16, max_steps=1024)
+    rep = tenant_reports(serve_specs(
+        [spec("t0"), spec("t1", seed=1)], cfg, arrivals=[0, 0]))
+    assert rep["t0"].queue_wait_ticks == 0
+    assert rep["t1"].queue_wait_ticks > 0
+    assert rep["t1"].ttd_ticks > rep["t0"].ttd_ticks
+
+
+def test_report_percentiles_and_throughput():
+    rep = serve_specs([spec(f"t{i}", seed=i) for i in range(4)])
+    assert rep.served == 4 and rep.converged
+    for q in ("p50", "p95", "p99"):
+        assert q in rep.ttd_ticks and q in rep.queue_wait_ticks
+    assert rep.throughput["tenants_per_tick"] > 0
+    assert rep.ticks == rep.outer_iters > 0
